@@ -1,0 +1,77 @@
+"""Fig. 11 reproduction: decode/prefill latency scaling with token count.
+
+Paper: decode speed ~flat (~90 tok/s) below 512 tokens, then MHA's quadratic
+KV term takes over; FFN runtime is context-independent; prefill scales
+~linearly with prompt length.  We reproduce the curves from the op-graph
+model (VCU128 constants) and report the latency *breakdown* (MHA / FFN /
+other) that Fig. 11(b) plots.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import opgraph
+
+HBM_BW = 460e9
+DDR_BW = 60e9
+FPGA_FLOPS = 2.294e12
+
+
+def _split(graph):
+    mha = [op for op in graph if op.kind in ("mha", "cache_write", "softmax",
+                                             "rope")]
+    ffn = [op for op in graph if op.kind == "vmm" and
+           ("h->4h" in op.name or "4h->h" in op.name or "step14" in op.name
+            or "step16" in op.name)]
+    other = [op for op in graph if op not in mha and op not in ffn]
+    return mha, ffn, other
+
+
+def run(arch: str = "chatglm-6b") -> dict:
+    cfg = get_config(arch)
+    t = lambda ops_: sum(op.ideal_time_s(hbm_bw=HBM_BW, ddr_bw=DDR_BW,
+                                         compute_flops=FPGA_FLOPS)
+                         for op in ops_) * cfg.n_layers
+
+    decode_rows = []
+    for ctx in (128, 256, 512, 1024, 2048, 4096):
+        g = opgraph.block_graph(cfg, tokens=1, context=ctx)
+        mha, ffn, other = _split(g)
+        total = t(g) + 1e-4  # + epilogue ballpark
+        decode_rows.append({
+            "context": ctx,
+            "tokens_per_s": round(1.0 / total, 1),
+            "mha_ms": round(t(mha) * 1e3, 3),
+            "ffn_ms": round(t(ffn) * 1e3, 3),
+            "other_ms": round(t(other) * 1e3, 3),
+        })
+
+    prefill_rows = []
+    for tokens in (128, 256, 512, 1024):
+        g = opgraph.block_graph(cfg, tokens=tokens, context=tokens)
+        prefill_rows.append({
+            "tokens": tokens,
+            "latency_ms": round(t(g) * 1e3, 2),
+        })
+    return {"decode": decode_rows, "prefill": prefill_rows}
+
+
+def rows() -> list[tuple[str, float, str]]:
+    r = run()
+    out = []
+    for row in r["decode"]:
+        out.append((f"fig11/decode_ctx{row['context']}", 0.0,
+                    f"{row['tokens_per_s']}tok/s mha={row['mha_ms']}ms "
+                    f"ffn={row['ffn_ms']}ms"))
+    for row in r["prefill"]:
+        out.append((f"fig11/prefill_{row['tokens']}", row["latency_ms"] * 1e3,
+                    f"{row['latency_ms']}ms"))
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    for k, v in r.items():
+        print(k)
+        for row in v:
+            print("  ", row)

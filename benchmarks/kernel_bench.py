@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: wall time of the jitted XLA ops on this host
+(CPU) + derived model quantities.  Pallas kernels run in interpret mode on
+CPU, so wall times are only meaningful for the XLA paths; the derived
+column carries the TPU-roofline projection instead.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import quantize
+from repro.core.sparsity import block_sparsify_quantize
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # compile + warm
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows() -> list[tuple[str, float, str]]:
+    out = []
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (16, 2048)).astype(np.float32)).astype(jnp.bfloat16)
+    w = jnp.asarray(rng.normal(0, 1, (2048, 2048)).astype(np.float32))
+    qt = quantize(w)
+    st = block_sparsify_quantize(w, 0.25)
+
+    us = _time(jax.jit(lambda a, q: ops.w4a16_matmul(a, q, impl="xla")), x, qt)
+    # TPU v5e projection: memory-bound decode time = bytes / 819 GB/s
+    t_mem = qt.nbytes_model / 819e9 * 1e6
+    out.append(("kernel/w4a16_matmul_2048x2048", us,
+                f"v5e_mem_bound={t_mem:.2f}us int4_bytes={qt.nbytes_model}"))
+
+    us = _time(jax.jit(lambda a, s: ops.sparse_w4a16_matmul(a, s, impl="xla")), x, st)
+    t_mem_s = st.nbytes_model / 819e9 * 1e6
+    out.append(("kernel/sparse_w4a16_d0.25", us,
+                f"v5e_mem_bound={t_mem_s:.2f}us bytes={st.nbytes_model} "
+                f"vs_dense={qt.nbytes_model / st.nbytes_model:.2f}x"))
+
+    q = jnp.asarray(rng.normal(0, 1, (1, 8, 2048, 128)).astype(np.float32)).astype(jnp.bfloat16)
+    us = _time(jax.jit(lambda a: ops.attention(a, a, a, causal=True, impl="xla")), q)
+    flops = 4 * 8 * 2048 * 2048 * 128 / 2
+    out.append(("kernel/attention_2k_causal", us,
+                f"v5e_compute_bound={flops / 197e12 * 1e6:.2f}us"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r)

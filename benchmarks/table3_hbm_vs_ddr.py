@@ -1,0 +1,74 @@
+"""Table III reproduction: per-operator step latency, HBM vs DDR memory
+system, decode token=128 and prefill token=128 (dense GLM).
+
+Uses the op-graph latency model (core/opgraph.py) with the paper's VCU128
+constants: HBM 460 GB/s, DDR 60 GB/s, compute 8192 MACs @ 280 MHz
+(decode parallelism 2048 x 2 clock = 1.147 TFLOP/s eqv).  Reproduces the
+paper's qualitative structure: VMM steps dominate and blow up ~4x on DDR in
+decode; prefill is compute-bound so DDR hurts far less; plus the
+paper's summary rows (single-block delay, total LLM delay, token/s).
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import opgraph
+
+HBM_BW = 460e9
+DDR_BW = 60e9
+FPGA_FLOPS = 2.294e12      # 4096 int4 MACs @ 280 MHz x 2 ops/MAC
+
+
+def run(arch: str = "chatglm-6b") -> dict:
+    cfg = get_config(arch)
+    out = {"steps": [], "summary": {}}
+    for mode, tokens in (("decode", 1), ("prefill", 128)):
+        ctx = 128
+        graph = opgraph.block_graph(cfg, tokens=tokens, context=ctx)
+        rows = []
+        for op in graph:
+            t_hbm = op.ideal_time_s(hbm_bw=HBM_BW, ddr_bw=DDR_BW,
+                                    compute_flops=FPGA_FLOPS)
+            t_ddr = op.ideal_time_s(hbm_bw=DDR_BW, ddr_bw=DDR_BW,
+                                    compute_flops=FPGA_FLOPS)
+            rows.append({"step": op.name, "mode": mode,
+                         "hbm_us": t_hbm * 1e6, "ddr_us": t_ddr * 1e6})
+        out["steps"].extend(rows)
+        block_hbm = sum(r["hbm_us"] for r in rows)
+        block_ddr = sum(r["ddr_us"] for r in rows)
+        epi = opgraph.epilogue_graph(cfg)
+        epi_hbm = sum(op.ideal_time_s(hbm_bw=HBM_BW, ddr_bw=DDR_BW,
+                                      compute_flops=FPGA_FLOPS) for op in epi)
+        epi_ddr = sum(op.ideal_time_s(hbm_bw=DDR_BW, ddr_bw=DDR_BW,
+                                      compute_flops=FPGA_FLOPS) for op in epi)
+        total_hbm = block_hbm * cfg.n_layers + epi_hbm * 1e6
+        total_ddr = block_ddr * cfg.n_layers + epi_ddr * 1e6
+        out["summary"][mode] = {
+            "block_hbm_us": round(block_hbm, 1),
+            "block_ddr_us": round(block_ddr, 1),
+            "total_hbm_ms": round(total_hbm / 1e3, 2),
+            "total_ddr_ms": round(total_ddr / 1e3, 2),
+            "tokens_per_s_hbm": round(tokens / (total_hbm / 1e6), 2),
+            "tokens_per_s_ddr": round(tokens / (total_ddr / 1e6), 2),
+            "ddr_slowdown": round(total_ddr / total_hbm, 2),
+        }
+    return out
+
+
+def rows() -> list[tuple[str, float, str]]:
+    r = run()
+    out = []
+    for mode, s in r["summary"].items():
+        out.append((f"table3/{mode}", s["block_hbm_us"],
+                    f"hbm={s['tokens_per_s_hbm']}tok/s "
+                    f"ddr={s['tokens_per_s_ddr']}tok/s "
+                    f"slowdown={s['ddr_slowdown']}x"))
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    for row in r["steps"]:
+        print(f"{row['mode']:8s} {row['step']:24s} "
+              f"hbm={row['hbm_us']:9.2f}us ddr={row['ddr_us']:9.2f}us")
+    print(r["summary"])

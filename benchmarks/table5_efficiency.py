@@ -1,0 +1,79 @@
+"""Table V reproduction: platform efficiency comparison.
+
+Paper row (EdgeLLM @ VCU128): ~75% bandwidth utilization, 85.8 tok/s on the
+6B LLM @ 56.8 W -> 1.51 token/J.  We reproduce EdgeLLM's own numbers from
+the op-graph model, then extend the table with the TPU-v5e single-chip
+projection of the same W4A16 + sparse technique (this repo's actual
+target), derived from the decode roofline memory term.
+"""
+
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import opgraph
+from repro.core.sparsity import packing_cost
+
+VCU128 = dict(hbm_bw=460e9, ddr_bw=60e9, compute=2.294e12, power_w=56.86)
+V5E = dict(hbm_bw=819e9, compute=197e12, power_w=170.0)  # chip TDP est.
+
+
+def _edgellm_tokens_per_s(cfg, wt_bits: float, hw=VCU128, ctx=128) -> float:
+    g = opgraph.model_graph(cfg, tokens=1, context=ctx, wt_bits=wt_bits)
+    t = opgraph.total_time_s(g, hbm_bw=hw["hbm_bw"], ddr_bw=hw["ddr_bw"],
+                             compute_flops=hw["compute"])
+    return 1.0 / t
+
+
+def _v5e_decode_tokens_per_s(cfg, wt_bits: float, ctx=128) -> float:
+    """Weight-streaming bound on one v5e chip (decode batch 1)."""
+    n = cfg.param_count()
+    weight_bytes = n * wt_bits / 8
+    kv_bytes = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * ctx * 2
+    return V5E["hbm_bw"] / (weight_bytes + kv_bytes)
+
+
+def run() -> list[dict]:
+    cfg = get_config("chatglm-6b")
+    qwen = get_config("qwen-7b")
+    sparse_bits = packing_cost(0.25, "auto").effective_bitwidth()  # s2-ish mix
+    dense_bits = packing_cost(1.0).effective_bitwidth()
+
+    rows_ = [
+        {"platform": "A100 GPU (paper)", "bw_util": "~30%",
+         "tokens_per_s": 45.0, "power_w": 220.0},
+        {"platform": "FlightLLM U280 (paper)", "bw_util": "65.9%",
+         "tokens_per_s": 55.0, "power_w": 45.0},
+        {"platform": "EdgeLLM VCU128 (paper)", "bw_util": "~75%",
+         "tokens_per_s": 85.8, "power_w": 56.86},
+    ]
+    # our reproduction of the paper's own platform, sparse strategy-3-ish
+    ours = _edgellm_tokens_per_s(cfg, wt_bits=2.2)
+    rows_.append({"platform": "EdgeLLM VCU128 (our model)",
+                  "bw_util": "100% (ideal)", "tokens_per_s": round(ours, 1),
+                  "power_w": 56.86})
+    rows_.append({"platform": "Qwen-7B VCU128 (our model)",
+                  "bw_util": "100% (ideal)",
+                  "tokens_per_s": round(
+                      _edgellm_tokens_per_s(qwen, wt_bits=2.2), 1),
+                  "power_w": 56.86})
+    # TPU v5e projections of the same technique
+    for name, bits in (("bf16", 16.0), ("W4A16 dense", dense_bits),
+                       ("W4A16+sparse-s2", 2.7)):
+        tps = _v5e_decode_tokens_per_s(cfg, bits)
+        rows_.append({"platform": f"TPU v5e 1 chip, {name} (this repo)",
+                      "bw_util": "100% (roofline)",
+                      "tokens_per_s": round(tps, 1), "power_w": V5E["power_w"]})
+    for r in rows_:
+        r["tokens_per_joule"] = round(r["tokens_per_s"] / r["power_w"], 3)
+    return rows_
+
+
+def rows() -> list[tuple[str, float, str]]:
+    return [(f"table5/{r['platform'][:40]}", 0.0,
+             f"{r['tokens_per_s']}tok/s {r['tokens_per_joule']}tok/J")
+            for r in run()]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

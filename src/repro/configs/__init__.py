@@ -1,0 +1,76 @@
+"""Architecture config registry.
+
+Each ``<arch>.py`` module defines:
+
+    config()        -> full-size ModelConfig (assignment-exact)
+    smoke_config()  -> reduced same-family config for CPU tests
+    SKIP            -> dict[shape_name, reason] of inapplicable cells
+
+Use ``get_config(name)`` / ``get_smoke_config(name)`` / ``list_archs()``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.shapes import SHAPES, ShapeCell
+
+ARCHS = [
+    "qwen1.5-4b",
+    "gemma-2b",
+    "starcoder2-7b",
+    "qwen3-8b",
+    "xlstm-1.3b",
+    "granite-moe-3b-a800m",
+    "mixtral-8x22b",
+    "qwen2-vl-7b",
+    "whisper-small",
+    "zamba2-7b",
+]
+
+# canonical ids from the assignment map to module names
+ALIASES = {
+    "qwen1.5-4b": "qwen1_5_4b",
+    "gemma-2b": "gemma_2b",
+    "starcoder2-7b": "starcoder2_7b",
+    "qwen3-8b": "qwen3_8b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-small": "whisper_small",
+    "zamba2-7b": "zamba2_7b",
+    # paper's own models
+    "chatglm-6b": "chatglm_6b",
+    "qwen-7b": "qwen_7b",
+}
+
+
+def _module(name: str):
+    mod = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(name: str, **overrides):
+    import dataclasses
+    cfg = _module(name).config()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def get_smoke_config(name: str, **overrides):
+    import dataclasses
+    cfg = _module(name).smoke_config()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def skip_reason(name: str, shape: str) -> str | None:
+    return getattr(_module(name), "SKIP", {}).get(shape)
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+def list_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) cells including skipped ones."""
+    return [(a, s) for a in ARCHS for s in SHAPES]

@@ -1,0 +1,26 @@
+"""ChatGLM2-6B — the paper's own primary model (EdgeLLM Table II / Fig 11).
+28L d4096 32H (MQA kv=2 "multi-query group 2") d_ff=13696 vocab=65024."""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "pure full attention — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm-6b", family="dense",
+        n_layers=28, d_model=4096, n_heads=32, n_kv_heads=2,
+        d_ff=13696, vocab_size=65024, head_dim=128,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_theta=10000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm-6b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=256, head_dim=32,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_theta=10000.0, dtype=jnp.float32, remat="none",
+    )

@@ -1,0 +1,27 @@
+"""gemma-2b [dense] — 18L d2048 8H (MQA kv=1) d_ff=16384 vocab=256000,
+GeGLU, head_dim=256.  [arXiv:2403.08295; hf]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "pure full attention — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b", family="dense",
+        n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+        d_ff=16384, vocab_size=256000, head_dim=256,
+        activation="geglu", norm="rmsnorm",
+        rope_theta=10000.0, tie_embeddings=True, embed_scale=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=1,
+        d_ff=256, vocab_size=256, head_dim=64,
+        activation="geglu", norm="rmsnorm",
+        rope_theta=10000.0, tie_embeddings=True, embed_scale=True,
+        dtype=jnp.float32, remat="none",
+    )

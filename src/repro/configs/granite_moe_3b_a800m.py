@@ -1,0 +1,28 @@
+"""granite-moe-3b-a800m [moe] — 32L d1536 24H (GQA kv=8) d_ff=512/expert,
+vocab=49155, MoE 40 experts top-8.  [hf:ibm-granite; hf]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "pure full attention — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m", family="moe",
+        n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8,
+        d_ff=512, vocab_size=49155, head_dim=64,
+        activation="swiglu", norm="rmsnorm",
+        rope_theta=10000.0, tie_embeddings=True,
+        n_experts=40, top_k=8,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-smoke", family="moe",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab_size=256, head_dim=32,
+        activation="swiglu", norm="rmsnorm",
+        rope_theta=10000.0, tie_embeddings=True,
+        n_experts=4, top_k=2, dtype=jnp.float32, remat="none",
+    )

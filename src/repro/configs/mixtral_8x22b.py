@@ -1,0 +1,28 @@
+"""mixtral-8x22b [moe] — 56L d6144 48H (GQA kv=8) d_ff=16384/expert,
+vocab=32768, 8 experts top-2, SWA.  [arXiv:2401.04088; hf]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {}  # SWA caps the KV window: long_500k runs
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b", family="moe",
+        n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8,
+        d_ff=16384, vocab_size=32768, head_dim=128,
+        activation="swiglu", norm="rmsnorm",
+        rope_theta=1e6, window=4096,
+        n_experts=8, top_k=2,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-smoke", family="moe",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=256, head_dim=32,
+        activation="swiglu", norm="rmsnorm",
+        rope_theta=1e6, window=64,
+        n_experts=4, top_k=2, dtype=jnp.float32, remat="none",
+    )

@@ -1,0 +1,26 @@
+"""qwen1.5-4b [dense] — 40L d2560 20H (kv=20) d_ff=6912 vocab=151936, QKV bias.
+[hf:Qwen/Qwen1.5-0.5B family; hf]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "pure full attention — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-4b", family="dense",
+        n_layers=40, d_model=2560, n_heads=20, n_kv_heads=20,
+        d_ff=6912, vocab_size=151936, head_dim=128,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-4b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab_size=256, head_dim=32,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_theta=1e6, dtype=jnp.float32, remat="none",
+    )

@@ -1,0 +1,28 @@
+"""qwen2-vl-7b [vlm] — 28L d3584 28H (GQA kv=4) d_ff=18944 vocab=152064,
+M-RoPE, dynamic-resolution patch frontend STUBBED (input_specs provides
+patch embeddings).  [arXiv:2409.12191; hf]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "pure full attention — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b", family="vlm",
+        n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+        d_ff=18944, vocab_size=152064, head_dim=128,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_type="mrope", mrope_sections=(16, 24, 24), rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-smoke", family="vlm",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=256, head_dim=32,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_type="mrope", mrope_sections=(4, 6, 6), rope_theta=1e6,
+        dtype=jnp.float32, remat="none",
+    )

@@ -1,0 +1,26 @@
+"""qwen3-8b [dense] — 36L d4096 32H (GQA kv=8) d_ff=12288 vocab=151936,
+qk_norm.  [hf:Qwen/Qwen3-8B; hf]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "pure full attention — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b", family="dense",
+        n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+        d_ff=12288, vocab_size=151936, head_dim=128,
+        activation="swiglu", norm="rmsnorm", qk_norm=True,
+        rope_theta=1e6,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=256, head_dim=32,
+        activation="swiglu", norm="rmsnorm", qk_norm=True,
+        rope_theta=1e6, dtype=jnp.float32, remat="none",
+    )

@@ -1,0 +1,27 @@
+"""Qwen-7B — the paper's second model (EdgeLLM §V-A).
+32L d4096 32H (kv=32; paper notes 4 shared weight-heads) d_ff=11008
+vocab=151936."""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "pure full attention — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen-7b", family="dense",
+        n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+        d_ff=11008, vocab_size=151936, head_dim=128,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_theta=10000.0,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen-7b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=256, head_dim=32,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_theta=10000.0, dtype=jnp.float32, remat="none",
+    )

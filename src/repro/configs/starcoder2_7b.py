@@ -1,0 +1,26 @@
+"""starcoder2-7b [dense] — 32L d4608 36H (GQA kv=4) d_ff=18432 vocab=49152,
+GQA + RoPE, LayerNorm + plain GELU MLP, biases.  [arXiv:2402.19173; hf]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "pure full attention — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b", family="dense",
+        n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+        d_ff=18432, vocab_size=49152, head_dim=128,
+        activation="gelu", norm="layernorm", qkv_bias=True,
+        rope_theta=1e5,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b-smoke", family="dense",
+        n_layers=2, d_model=144, n_heads=4, n_kv_heads=2,
+        d_ff=288, vocab_size=256, head_dim=36,
+        activation="gelu", norm="layernorm", qkv_bias=True,
+        rope_theta=1e5, dtype=jnp.float32, remat="none",
+    )

@@ -1,0 +1,28 @@
+"""whisper-small [audio] — 12L enc + 12L dec, d768 12H d_ff=3072
+vocab=51865, conv frontend STUBBED (input_specs provides frame embeddings).
+[arXiv:2212.04356; unverified]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {"long_500k": "full-attention enc-dec — quadratic; sub-quadratic required"}
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small", family="audio",
+        n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+        d_ff=3072, vocab_size=51865, head_dim=64,
+        activation="gelu", norm="layernorm", rope_type="none",
+        n_encoder_layers=12, encoder_frames=1500,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small-smoke", family="audio",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab_size=256, head_dim=32,
+        activation="gelu", norm="layernorm", rope_type="none",
+        n_encoder_layers=2, encoder_frames=32,
+        dtype=jnp.float32, remat="none",
+    )

@@ -1,0 +1,25 @@
+"""xlstm-1.3b [ssm] — 48L d2048 4H, sLSTM + mLSTM blocks (7:1),
+vocab=50304.  [arXiv:2405.04517; unverified]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {}  # recurrent state: long_500k runs
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-1.3b", family="ssm",
+        n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab_size=50304, head_dim=512,
+        norm="rmsnorm", rope_type="none", slstm_every=8,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-1.3b-smoke", family="ssm",
+        n_layers=4, d_model=128, n_heads=2, n_kv_heads=2,
+        d_ff=0, vocab_size=256, head_dim=64,
+        norm="rmsnorm", rope_type="none", slstm_every=2,
+        dtype=jnp.float32, remat="none",
+    )

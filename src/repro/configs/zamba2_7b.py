@@ -1,0 +1,32 @@
+"""zamba2-7b [hybrid] — 81L d3584 32H (kv=32) d_ff=14336 ssm_state=64
+vocab=32000, Mamba2 backbone + 2 alternating shared attention blocks every
+6 layers.  [arXiv:2411.15242; unverified]"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+
+SKIP = {}  # Mamba2 state is O(1); shared-attn KV shards over data: long_500k runs
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b", family="hybrid",
+        n_layers=81, d_model=3584, n_heads=32, n_kv_heads=32,
+        d_ff=14336, vocab_size=32000, head_dim=112,
+        activation="swiglu", norm="rmsnorm",
+        rope_theta=10000.0,
+        ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_conv=4,
+        shared_attn_every=6, n_shared_blocks=2,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid",
+        n_layers=5, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab_size=256, head_dim=32,
+        activation="swiglu", norm="rmsnorm",
+        rope_theta=10000.0,
+        ssm_state=16, ssm_head_dim=32, ssm_expand=2, ssm_conv=4,
+        shared_attn_every=2, n_shared_blocks=2,
+        dtype=jnp.float32, remat="none",
+    )

@@ -1,0 +1,207 @@
+"""End-to-end model compiler (EdgeLLM §IV) — the JAX restatement.
+
+Two halves:
+
+1. **quantize_model** — the offline half of the paper's compiler: walk the
+   parameter pytree and replace every static weight matrix with its W4A16
+   (``QuantizedTensor``) or log-scale-sparse (``SparseQuantizedTensor``)
+   packed form, per a *sparse strategy* (the paper's Table II per-layer-kind
+   density map).  Dynamically-generated operands (KV caches, activations,
+   norms, router, conv, embeddings-as-lookup) stay 16-bit, exactly the
+   paper's rule.
+
+2. **CompileCache / buckets** — the online half: the paper compiles
+   instruction streams per dynamic token length with a MAX-token static
+   address space.  Under JAX, a compiled executable per (shape-bucket) is
+   the same contract; ``TokenBuckets`` picks the bucket, and
+   ``CompileCache`` memoizes jit executables per (fn, bucket) so serving
+   never re-traces mid-flight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import GROUP_SIZE, QuantizedTensor, quantize
+from repro.core.sparsity import (
+    BLOCKS_PER_GROUP,
+    SparseQuantizedTensor,
+    block_sparsify_quantize,
+)
+
+# ---------------------------------------------------------------------------
+# sparse strategies (paper Table II)
+# ---------------------------------------------------------------------------
+
+# layer-kind -> density (1.0 = dense-quantized; None = keep 16-bit)
+SPARSE_STRATEGIES: dict[str, dict[str, float]] = {
+    # paper Table II, GLM-6B
+    "dense": {"qkv": 1.0, "o": 1.0, "h_to_4h": 1.0, "4h_to_h": 1.0,
+              "head": 1.0, "other": 1.0},
+    "strategy1": {"qkv": 1.0, "o": 0.5, "h_to_4h": 0.5, "4h_to_h": 0.5,
+                  "head": 1.0, "other": 1.0},
+    "strategy2": {"qkv": 1.0, "o": 0.5, "h_to_4h": 0.25, "4h_to_h": 0.5,
+                  "head": 1.0, "other": 1.0},
+    "strategy3": {"qkv": 1.0, "o": 0.5, "h_to_4h": 0.25, "4h_to_h": 0.25,
+                  "head": 1.0, "other": 1.0},
+}
+
+_KIND_BY_NAME = {
+    "wq": "qkv", "wk": "qkv", "wv": "qkv", "wo": "o",
+    "gate": "h_to_4h", "up": "h_to_4h", "down": "4h_to_h",
+    "lm_head": "head",
+    "in_proj": "other", "out_proj": "other",
+    "up_x": "h_to_4h", "up_z": "h_to_4h",
+    "w_gates": "other",
+    # r_gates (sLSTM recurrent, block-diagonal, streamed per timestep) is
+    # deliberately NOT quantized: it is tiny and sits inside the recurrence
+}
+
+_NEVER_QUANTIZE = {
+    "embed", "router", "conv_w", "conv_b", "gamma", "beta", "norm",
+    "out_norm", "A_log", "D", "dt_bias", "q_norm", "k_norm",
+    "w_i", "w_f", "b_i", "b_f", "b_gates", "bq", "bk", "bv",
+    "up_bias", "down_bias", "scale",
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+    return ""
+
+
+def _quantize_2d(w, density: float, shard_groups: int | None = None):
+    """shard_groups: make (in_features // group_size) divisible by this —
+    required when the contraction axis is TP-sharded at serve time (MoE
+    experts under shard_map); smaller groups cost a few extra scale bits."""
+    in_f, out_f = w.shape
+    group = GROUP_SIZE
+    if shard_groups:
+        for g in (128, 64, 32):
+            if in_f % g == 0 and (in_f // g) % shard_groups == 0:
+                group = g
+                break
+    if in_f % group or (density < 1.0 and out_f % 128):
+        return w  # not tileable; keep 16-bit
+    if density >= 1.0:
+        return quantize(w, group_size=group)
+    n_blocks = in_f // 128
+    if in_f % 128 == 0:
+        for m in (BLOCKS_PER_GROUP, 4, 2):
+            if n_blocks % m == 0 and round(density * m) >= 1:
+                return block_sparsify_quantize(w, density, blocks_per_group=m)
+    return quantize(w, group_size=group)
+
+
+def quantize_model(params: Any, strategy: str | dict = "dense") -> Any:
+    """Pytree transform: static weight matrices -> packed INT4 (+sparse).
+
+    Stacked leading dims (layer scan, experts, segments) are vmapped over,
+    so a (L, E, d, f) MoE weight becomes a QuantizedTensor whose arrays
+    carry (L, E, ...) leading axes — scan/slice compatible.
+    """
+    dmap = SPARSE_STRATEGIES[strategy] if isinstance(strategy, str) else strategy
+
+    def f(path, leaf):
+        names = [str(e.key) for e in path
+                 if isinstance(e, jax.tree_util.DictKey)]
+        name = _leaf_name(path)
+        if name in _NEVER_QUANTIZE or not hasattr(leaf, "dtype"):
+            return leaf
+        if not jnp.issubdtype(leaf.dtype, jnp.floating) or leaf.ndim < 2:
+            return leaf
+        kind = _KIND_BY_NAME.get(name)
+        if kind is None:
+            return leaf
+        density = dmap.get(kind, 1.0)
+        if density is None:
+            return leaf
+
+        # MoE expert contractions are TP-sharded at serve time: keep their
+        # quant-group count divisible by the model-axis size (16)
+        shard_groups = 16 if "moe" in names else None
+        fn = functools.partial(_quantize_2d, density=density,
+                               shard_groups=shard_groups)
+        for _ in range(leaf.ndim - 2):
+            fn = jax.vmap(fn)
+        return fn(leaf)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def quantized_bytes(params: Any) -> int:
+    """Total HBM bytes of the packed model (the paper's Table II wt. sums)."""
+    total = 0
+
+    def visit(leaf):
+        nonlocal total
+        if isinstance(leaf, (QuantizedTensor, SparseQuantizedTensor)):
+            total += leaf.nbytes_model
+        elif hasattr(leaf, "dtype"):
+            total += leaf.size * leaf.dtype.itemsize
+
+    jax.tree.map(visit, params,
+                 is_leaf=lambda x: isinstance(
+                     x, (QuantizedTensor, SparseQuantizedTensor)))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# dynamic-token compile cache (paper §IV-B)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TokenBuckets:
+    """Power-of-two token-length buckets with a MAX token bound.
+
+    The paper's compiler embeds the token count as a DAG variable evaluated
+    at runtime; XLA needs static shapes, so the equivalent contract is
+    bucketed padding: 17 operators × B buckets executables instead of 17 × T.
+    """
+
+    max_tokens: int
+    min_bucket: int = 16
+
+    def bucket(self, n: int) -> int:
+        if n > self.max_tokens:
+            raise ValueError(f"{n} tokens exceeds MAX {self.max_tokens}")
+        b = self.min_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.max_tokens)
+
+    def all_buckets(self) -> list[int]:
+        out, b = [], self.min_bucket
+        while b < self.max_tokens:
+            out.append(b)
+            b *= 2
+        out.append(self.max_tokens)
+        return out
+
+
+class CompileCache:
+    """Memoized jit executables per (name, bucket) — dynamic compilation."""
+
+    def __init__(self):
+        self._cache: dict[tuple, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, name: str, bucket: int, build: Callable[[], Any]):
+        key = (name, bucket)
+        if key not in self._cache:
+            self._cache[key] = build()
+            self.misses += 1
+        else:
+            self.hits += 1
+        return self._cache[key]
+
+    def __len__(self):
+        return len(self._cache)

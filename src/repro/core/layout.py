@@ -1,0 +1,88 @@
+"""Unified data format (EdgeLLM §IV-A).
+
+The paper keeps *every* operator's activations in one canonical tensor shape
+so that no reshape/transpose is ever needed between operators and every AXI
+burst is a contiguous ``T_out × 16 bit`` packet:
+
+    text:   [CH / T_out, token, T_out]
+    image:  [CH / T_out, H, W, T_out]
+    (+ leading head / batch dims as needed)
+
+On TPU the analogous invariant is: the minor-most axis is the 128-lane axis,
+activations are ``[..., token, d_model]`` with ``d_model % 128 == 0``, and
+every kernel BlockSpec tiles ``(tokens_block, 128·k)``.  ``T_out = 128`` (the
+paper uses the AXI width / 16; we use the VPU lane width).
+
+This module provides the canonical-layout type, the pack/unpack bijections to
+the paper's explicit ``[CH/T, token, T]`` form, and the layout check the
+op-graph compiler runs between fused steps (the "no data rearrangement"
+guarantee, enforced rather than assumed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+T_OUT = 128  # lane width; the paper's T_out (AXI 2048-bit / FP16)
+
+__all__ = ["T_OUT", "Layout", "to_unified", "from_unified", "check_canonical", "pad_to_lanes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Declared layout of an operator's input/output."""
+
+    channels: int                 # CH (model dim)
+    t_out: int = T_OUT
+
+    def __post_init__(self):
+        if self.channels % self.t_out:
+            raise ValueError(
+                f"channels {self.channels} not a multiple of T_out {self.t_out}; "
+                f"pad with pad_to_lanes() first")
+
+    @property
+    def ch_tiles(self) -> int:
+        return self.channels // self.t_out
+
+
+def pad_to_lanes(channels: int, t_out: int = T_OUT) -> int:
+    """Smallest multiple of t_out >= channels."""
+    return (channels + t_out - 1) // t_out * t_out
+
+
+def to_unified(x: jax.Array, t_out: int = T_OUT) -> jax.Array:
+    """[..., token, CH] -> [..., CH/T, token, T]  (paper Fig. 7 packing)."""
+    *lead, tok, ch = x.shape
+    if ch % t_out:
+        raise ValueError(f"channel dim {ch} not a multiple of {t_out}")
+    x = x.reshape(*lead, tok, ch // t_out, t_out)
+    perm = list(range(len(lead))) + [len(lead) + 1, len(lead), len(lead) + 2]
+    return jnp.transpose(x, perm)
+
+
+def from_unified(x: jax.Array) -> jax.Array:
+    """[..., CH/T, token, T] -> [..., token, CH]."""
+    *lead, cht, tok, t = x.shape
+    perm = list(range(len(lead))) + [len(lead) + 1, len(lead), len(lead) + 2]
+    x = jnp.transpose(x, perm)
+    return x.reshape(*lead, tok, cht * t)
+
+
+def check_canonical(x: jax.Array | jax.ShapeDtypeStruct, t_out: int = T_OUT) -> None:
+    """Raise if an activation violates the canonical layout contract.
+
+    Canonical = minor-most axis is the channel axis and is 128-aligned.  The
+    op-graph compiler calls this at every fused-step boundary, which is how
+    the "no rearrangement between operators" property is *checked* rather
+    than hoped for.
+    """
+    if x.ndim < 2:
+        raise ValueError(f"activation must be >=2D, got shape {x.shape}")
+    if x.shape[-1] % t_out:
+        raise ValueError(
+            f"minor-most axis {x.shape[-1]} not {t_out}-aligned (shape {x.shape}); "
+            "an operator emitted a non-canonical layout")

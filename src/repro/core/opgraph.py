@@ -1,0 +1,163 @@
+"""Operator-graph IR: the paper's fused block schedule (EdgeLLM Fig. 6).
+
+The paper's compiler fuses one ChatGLM block into 17 hardware steps, each an
+operator with a fixed engine binding (HBM-fed MatMUL / MHA vs DDR-fed
+"other" ops) and the unified ``[CH/T_out, token, T_out]`` layout at every
+edge.  This module reproduces that artifact as a first-class IR:
+
+* ``OpNode`` — operator with kind, engine binding, byte/FLOP cost model;
+* ``block_graph(cfg)`` — the fused step list for one decoder block of any
+  configured architecture (the GLM-6B instance reproduces the paper's 17
+  steps + the 2 epilogue steps of Table III exactly — pinned in tests);
+* layout checking at every edge (``core.layout.check_canonical``) — the
+  "no data rearrangement between operators" property is enforced;
+* per-step latency model under a given memory system (HBM vs DDR
+  bandwidth), which is what benchmarks/table3 uses to reproduce the paper's
+  HBM-vs-DDR comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro.core.layout import T_OUT
+
+HBM = "hbm"    # weight/KV streaming engines (MatMUL, MHA)
+DDR = "ddr"    # activation-only operators (norms, softmax, rotary, ...)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpNode:
+    name: str
+    kind: str                     # vmm | mha | norm | softmax | rope | act |
+                                  # cache_write | transpose | elementwise
+    engine: str                   # HBM | DDR
+    weight_bytes: int = 0         # streamed per call (packed int4 + scales)
+    act_in_bytes: int = 0
+    act_out_bytes: int = 0
+    flops: int = 0
+
+    def ideal_time_s(self, *, hbm_bw: float, ddr_bw: float,
+                     compute_flops: float) -> float:
+        """Paper §V-B latency model: max(stream time, compute time); weights
+        stream from HBM, activations from DDR."""
+        t_w = self.weight_bytes / hbm_bw if self.weight_bytes else 0.0
+        t_a = (self.act_in_bytes + self.act_out_bytes) / ddr_bw
+        t_c = self.flops / compute_flops if self.flops else 0.0
+        return max(t_w + t_a, t_c)
+
+
+def _vmm(name, tokens, d_in, d_out, dtype_bytes=2, wt_bits=4.125,
+         engine=HBM) -> OpNode:
+    """VMM-BN step: block-quantized weight stream + activation in/out."""
+    return OpNode(
+        name=name, kind="vmm", engine=engine,
+        weight_bytes=int(d_in * d_out * wt_bits / 8),
+        act_in_bytes=tokens * d_in * dtype_bytes,
+        act_out_bytes=tokens * d_out * dtype_bytes,
+        flops=2 * tokens * d_in * d_out,
+    )
+
+
+def _simple(name, kind, tokens, d, dtype_bytes=2, flops_per_elem=4) -> OpNode:
+    return OpNode(
+        name=name, kind=kind, engine=DDR,
+        act_in_bytes=tokens * d * dtype_bytes,
+        act_out_bytes=tokens * d * dtype_bytes,
+        flops=flops_per_elem * tokens * d,
+    )
+
+
+def block_graph(cfg, *, tokens: int = 1, context: int = 128,
+                wt_bits: float = 4.125) -> list[OpNode]:
+    """The fused per-block schedule (paper Fig. 6 / Table III steps 1-17).
+
+    ``tokens`` = new tokens this pass (1 for decode), ``context`` = KV length.
+    """
+    d = cfg.d_model
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dtype_bytes = 2
+    f = cfg.d_ff
+
+    kv_bytes = context * hkv * hd * dtype_bytes
+    steps = [
+        _simple("step1:LayerNorm", "norm", tokens, d),
+        _vmm("step2:VMM-BN(Q)", tokens, d, hq * hd, wt_bits=wt_bits),
+        _simple("step3:PosEmb(Q)", "rope", tokens, hq * hd),
+        _vmm("step4:VMM-BN(K)", tokens, d, hkv * hd, wt_bits=wt_bits),
+        _simple("step5:PosEmb(K)", "rope", tokens, hkv * hd),
+        OpNode("step6:KcacheHBM", "cache_write", HBM,
+               act_in_bytes=tokens * hkv * hd * dtype_bytes),
+        OpNode("step7:VMM(Q*K^T)", "mha", HBM,
+               weight_bytes=kv_bytes,  # K stream plays the weight role
+               act_in_bytes=tokens * hq * hd * dtype_bytes,
+               act_out_bytes=tokens * hq * context * dtype_bytes,
+               flops=2 * tokens * hq * hd * context),
+        _simple("step8:Softmax", "softmax", tokens, hq * context,
+                flops_per_elem=6),
+        _vmm("step9:VMM-BN(V)", tokens, d, hkv * hd, wt_bits=wt_bits),
+        OpNode("step10:VcacheHBM", "cache_write", HBM,
+               act_in_bytes=tokens * hkv * hd * dtype_bytes),
+        OpNode("step11:VMM(SFT*V)", "mha", HBM,
+               weight_bytes=kv_bytes,
+               act_in_bytes=tokens * hq * context * dtype_bytes,
+               act_out_bytes=tokens * hq * hd * dtype_bytes,
+               flops=2 * tokens * hq * hd * context),
+        _vmm("step12:VMM-BN-RES(O)", tokens, hq * hd, d, wt_bits=wt_bits),
+        _simple("step13:LayerNorm", "norm", tokens, d),
+        _vmm("step14:VMM-BN(h->4h)", tokens, d,
+             2 * f if cfg.activation in ("swiglu", "geglu") else f,
+             wt_bits=wt_bits),
+        _simple("step15:Act(Swiglu)", "act", tokens, f),
+        _vmm("step16:VMM-BN-Res(4h->h)", tokens, f, d, wt_bits=wt_bits),
+        # step17 in the paper is the residual-fused output VMM of the block
+        _simple("step17:Residual", "elementwise", tokens, d, flops_per_elem=1),
+    ]
+    return steps
+
+
+def epilogue_graph(cfg, tokens: int = 1, wt_bits: float = 4.125) -> list[OpNode]:
+    """Steps 18-19 (Table III): final norm + LM head on the LAST token only
+    (the paper's last-token optimization, §IV-B)."""
+    return [
+        _simple("step18:Outlayer_LN", "norm", 1, cfg.d_model),
+        _vmm("step19:VMMBN_Arg", 1, cfg.d_model, cfg.vocab_size,
+             wt_bits=wt_bits),
+    ]
+
+
+def model_graph(cfg, *, tokens: int = 1, context: int = 128,
+                wt_bits: float = 4.125) -> list[OpNode]:
+    g: list[OpNode] = []
+    for layer in range(cfg.n_layers):
+        g.extend(block_graph(cfg, tokens=tokens, context=context,
+                             wt_bits=wt_bits))
+    g.extend(epilogue_graph(cfg, tokens=tokens, wt_bits=wt_bits))
+    return g
+
+
+def total_time_s(graph: Iterable[OpNode], *, hbm_bw: float = 460e9,
+                 ddr_bw: float = 60e9, compute_flops: float = 1.147e12
+                 ) -> float:
+    """Temporal execution (paper: "one operator starts only after the
+    previous one has finished"); defaults = VCU128 (460 GB/s HBM, 8192 MACs
+    @ 280 MHz x2 = 1.147 TFLOP/s)."""
+    return sum(op.ideal_time_s(hbm_bw=hbm_bw, ddr_bw=ddr_bw,
+                               compute_flops=compute_flops) for op in graph)
+
+
+def check_layouts(cfg) -> None:
+    """Every operator edge must carry the canonical layout (d % 128 == 0
+    after padding) — the paper's universal-format contract."""
+    from repro.core.layout import pad_to_lanes
+    dims = [cfg.d_model, cfg.n_heads * cfg.head_dim,
+            cfg.n_kv_heads * cfg.head_dim]
+    if cfg.d_ff:
+        dims.append(cfg.d_ff)
+    for dim in dims:
+        padded = pad_to_lanes(dim)
+        if padded != dim:
+            raise ValueError(
+                f"{cfg.name}: edge dim {dim} not {T_OUT}-aligned; pad to "
+                f"{padded} in the op-graph (paper Fig. 7 padding rule)")

@@ -1,0 +1,95 @@
+"""Instruction-pipeline latency hiding (EdgeLLM Fig. 9).
+
+The paper's accelerator pre-loads the next serialized instruction block
+while the current one executes, so host-side instruction updates cost ~zero
+after the first inference.  The JAX analogue has two layers:
+
+* **device side** — JAX async dispatch already queues the next jitted step
+  while the previous executes; ``PipelinedRunner`` exploits it by preparing
+  and dispatching step k+1 *before* blocking on step k's results, and
+  measures the achieved overlap (tests assert host-work is actually hidden);
+* **host side** — ``InstructionStream`` mirrors the paper's double-buffered
+  register file: a bounded deque of pre-built step closures (the
+  "serialized operator instructions"), refilled by a background thread from
+  the compiler, drained by the runner.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+
+
+class InstructionStream:
+    """Double-buffered queue of prepared step closures."""
+
+    def __init__(self, build: Callable[[int], Callable[[], Any]],
+                 depth: int = 2):
+        self._build = build
+        self._buf: collections.deque = collections.deque()
+        self._depth = depth
+        self._next = 0
+        self._lock = threading.Lock()
+        self.prepared = 0
+        self.fill()
+
+    def fill(self) -> None:
+        with self._lock:
+            while len(self._buf) < self._depth:
+                self._buf.append(self._build(self._next))
+                self._next += 1
+                self.prepared += 1
+
+    def pop(self) -> Callable[[], Any]:
+        with self._lock:
+            instr = self._buf.popleft()
+        self.fill()
+        return instr
+
+
+class PipelinedRunner:
+    """Dispatch-ahead step runner with overlap accounting.
+
+    ``host_work(step)`` models the per-step host preparation the paper hides
+    (dynamic instruction updates); ``device_step`` is the jitted function.
+    With ``pipelined=True`` the host work for step k+1 runs while the device
+    executes step k (async dispatch); with False everything serializes —
+    the delta is the measured Fig. 9 win.
+    """
+
+    def __init__(self, device_step: Callable, host_work: Callable[[int], Any],
+                 *, pipelined: bool = True):
+        self.device_step = device_step
+        self.host_work = host_work
+        self.pipelined = pipelined
+        self.host_time = 0.0
+        self.wall_time = 0.0
+
+    def run(self, state: Any, steps: int) -> Any:
+        t_start = time.monotonic()
+        if not self.pipelined:
+            for k in range(steps):
+                t0 = time.monotonic()
+                args = self.host_work(k)
+                self.host_time += time.monotonic() - t0
+                state = self.device_step(state, args)
+                state = jax.block_until_ready(state)   # serialize
+        else:
+            # dispatch step k, prepare k+1 while the device is busy, only
+            # then block on k's completion
+            t0 = time.monotonic()
+            args = self.host_work(0)
+            self.host_time += time.monotonic() - t0
+            for k in range(steps):
+                state = self.device_step(state, args)  # async dispatch
+                if k + 1 < steps:
+                    t0 = time.monotonic()
+                    args = self.host_work(k + 1)       # hidden behind device
+                    self.host_time += time.monotonic() - t0
+            state = jax.block_until_ready(state)
+        self.wall_time = time.monotonic() - t_start
+        return state

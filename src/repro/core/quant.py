@@ -1,0 +1,171 @@
+"""Block-level INT4 weight quantization (EdgeLLM §III-B / §III-C).
+
+The paper quantizes every static weight matrix to symmetric INT4 where 128
+adjacent input-channel parameters share one FP16 scale ("block-level
+quantization", group_size=128).  Activations stay in 16-bit float; the
+accelerator multiplies FP16 activations against INT4 weights and rescales by
+the block scale (the "Scale value" multiplier in Fig. 4 Stage-3).
+
+This module is the pure-JAX substrate used by both the XLA execution path and
+the Pallas kernels:
+
+* ``quantize`` / ``dequantize``      – round-trip with per-group scales
+* ``QuantizedTensor``                – pytree carrying packed nibbles + scales
+* nibble packing uses the *sublane-pair* scheme: within each 128-row group the
+  uint8 at row r holds the nibbles of rows ``r`` (low) and ``r + 64`` (high).
+  Unpacking in a kernel is therefore one mask, one shift and one sublane
+  concatenate - no interleaving reshuffle (TPU adaptation note in DESIGN.md).
+
+Weight convention throughout the repo: ``w`` has shape ``(in_features,
+out_features)`` and quantization groups run along the **contraction** axis
+(``in_features``), exactly like the paper's CH_in groups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GROUP_SIZE = 128          # paper: 128 adjacent params share one scale
+_HALF = GROUP_SIZE // 2   # 64: nibble-pair offset inside a group
+
+__all__ = [
+    "GROUP_SIZE",
+    "QuantizedTensor",
+    "quantize",
+    "dequantize",
+    "pack_int4",
+    "unpack_int4",
+    "quantization_error",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """Block-quantized INT4 weight.
+
+    Attributes:
+      packed:  uint8 ``(in_features // 2, out_features)`` - two int4 nibbles
+               per byte, sublane-pair packing within each 128-row group.
+      scales:  ``(in_features // group_size, out_features)`` scale per group
+               per output channel (paper stores FP16; we default bf16 and
+               upcast to f32 at use).
+      shape:   original ``(in_features, out_features)``.
+      group_size: contraction-axis group length (128).
+    """
+
+    packed: jax.Array
+    scales: jax.Array
+    shape: tuple[int, int]
+    group_size: int = GROUP_SIZE
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.packed, self.scales), (self.shape, self.group_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scales = children
+        shape, group_size = aux
+        return cls(packed=packed, scales=scales, shape=shape, group_size=group_size)
+
+    # -- conveniences -------------------------------------------------------
+    @property
+    def in_features(self) -> int:
+        return self.shape[0]
+
+    @property
+    def out_features(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nbytes_model(self) -> int:
+        """HBM bytes this tensor streams per full read (packed + scales)."""
+        scale_bytes = int(np.prod(self.scales.shape)) * self.scales.dtype.itemsize
+        return int(np.prod(self.packed.shape)) + scale_bytes
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jax.Array:
+        return dequantize(self, dtype=dtype)
+
+
+def pack_int4(q: jax.Array, group_size: int = GROUP_SIZE) -> jax.Array:
+    """Pack int4 values (int8 storage, range [-8, 7]) into uint8 nibbles.
+
+    ``q`` is ``(in, out)``; rows r and r+64 of each 128-row group share a byte
+    (low nibble = r, high nibble = r+64) so a kernel can unpack with a single
+    sublane concat.
+    """
+    in_f, out_f = q.shape
+    if in_f % group_size:
+        raise ValueError(f"in_features {in_f} not a multiple of {group_size}")
+    half = group_size // 2
+    g = q.reshape(in_f // group_size, group_size, out_f)
+    lo = g[:, :half, :]          # rows [0, 64)
+    hi = g[:, half:, :]          # rows [64, 128)
+    lo_u = jnp.asarray(lo, jnp.uint8) & 0xF
+    hi_u = jnp.asarray(hi, jnp.uint8) & 0xF
+    packed = lo_u | (hi_u << 4)
+    return packed.reshape(in_f // 2, out_f)
+
+
+def unpack_int4(packed: jax.Array, group_size: int = GROUP_SIZE) -> jax.Array:
+    """Inverse of :func:`pack_int4`; returns int8 values in [-8, 7]."""
+    in_half, out_f = packed.shape
+    half = group_size // 2
+    g = packed.reshape(in_half // half, half, out_f)
+    lo = (g & 0xF).astype(jnp.int8)
+    hi = (g >> 4).astype(jnp.int8)
+    # sign-extend 4-bit two's complement
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    full = jnp.concatenate([lo, hi], axis=1)  # (groups, 128, out)
+    return full.reshape(in_half * 2, out_f)
+
+
+def quantize(
+    w: jax.Array,
+    group_size: int = GROUP_SIZE,
+    scale_dtype=jnp.bfloat16,
+) -> QuantizedTensor:
+    """Symmetric block-level INT4 quantization along the contraction axis."""
+    in_f, out_f = w.shape
+    if in_f % group_size:
+        raise ValueError(f"in_features {in_f} not a multiple of {group_size}")
+    wf = jnp.asarray(w, jnp.float32)
+    g = wf.reshape(in_f // group_size, group_size, out_f)
+    absmax = jnp.max(jnp.abs(g), axis=1)                       # (groups, out)
+    scale = jnp.maximum(absmax / 7.0, 1e-10)
+    q = jnp.clip(jnp.round(g / scale[:, None, :]), -8, 7).astype(jnp.int8)
+    packed = pack_int4(q.reshape(in_f, out_f), group_size)
+    return QuantizedTensor(
+        packed=packed,
+        scales=scale.astype(scale_dtype),
+        shape=(in_f, out_f),
+        group_size=group_size,
+    )
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16) -> jax.Array:
+    q = unpack_int4(qt.packed, qt.group_size).astype(jnp.float32)
+    in_f, out_f = qt.shape
+    g = q.reshape(in_f // qt.group_size, qt.group_size, out_f)
+    w = g * qt.scales.astype(jnp.float32)[:, None, :]
+    return w.reshape(in_f, out_f).astype(dtype)
+
+
+def quantization_error(w: jax.Array, qt: QuantizedTensor) -> dict[str, Any]:
+    """Relative error metrics of the round-trip (paper Table-I methodology)."""
+    wf = jnp.asarray(w, jnp.float32)
+    wq = dequantize(qt, jnp.float32)
+    err = jnp.abs(wf - wq)
+    denom = jnp.maximum(jnp.abs(wf), 1e-8)
+    return {
+        "max_abs": float(jnp.max(err)),
+        "mean_rel": float(jnp.mean(err / denom)),
+        "rms": float(jnp.sqrt(jnp.mean(err**2))),
+    }

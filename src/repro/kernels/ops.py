@@ -1,0 +1,124 @@
+"""Public jit'd entry points for the kernel package.
+
+Each op dispatches between:
+
+* ``impl="pallas"``   — the Pallas TPU kernel (``interpret=True`` on CPU, a
+  real Mosaic lowering on TPU).  This is the performance path.
+* ``impl="xla"``      — a pure-XLA implementation with the *same numerics
+  contract* (group-exact scale-after-dot).  This is what the 512-device
+  dry-run lowers (Pallas cannot target the CPU dry-run backend), and the
+  fallback for shapes the kernels don't tile.
+
+The op-graph compiler (``core/compiler.py``) selects the impl per operator;
+models only ever call these wrappers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor
+from repro.core.sparsity import SparseQuantizedTensor
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sparse_w4a16 import sparse_w4a16_matmul_pallas
+from repro.kernels.w4a16_matmul import w4a16_matmul_pallas
+
+__all__ = ["w4a16_matmul", "sparse_w4a16_matmul", "attention", "decode_attention"]
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def w4a16_matmul(x: jax.Array, qt: QuantizedTensor, *, impl: str = "auto") -> jax.Array:
+    """x @ dequant(qt); group-exact W4A16 numerics on every path."""
+    if impl == "auto":
+        impl = "pallas" if _ON_TPU else "xla"
+    if impl == "pallas":
+        return w4a16_matmul_pallas(x, qt, interpret=not _ON_TPU)
+    if impl == "xla":
+        return _ref.w4a16_matmul_ref(x, qt)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def sparse_w4a16_matmul(
+    x: jax.Array, st: SparseQuantizedTensor, *, impl: str = "auto"
+) -> jax.Array:
+    if impl == "auto":
+        impl = "pallas" if _ON_TPU else "xla"
+    if impl == "pallas":
+        return sparse_w4a16_matmul_pallas(x, st, interpret=not _ON_TPU)
+    if impl == "xla":
+        # gather-then-dense-dot: same block gather the kernel does, expressed
+        # as XLA take + einsum (keeps the sparse byte/FLOP savings visible to
+        # cost_analysis)
+        in_f, out_f = st.shape
+        g = st.group_size
+        *lead, tokens, _ = x.shape
+        xb = x.reshape(-1, in_f // g, g)
+        # unpack kept blocks
+        lo = (st.packed & 0xF).astype(jnp.int8)
+        hi = (st.packed >> 4).astype(jnp.int8)
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        w = jnp.concatenate([lo, hi], axis=2).astype(jnp.bfloat16)  # (T,S,128,128)
+        xg = jnp.take(xb, st.block_idx, axis=1)          # (N, T, S, 128)
+        part = jnp.einsum("ntsg,tsgo->ntso", xg.astype(jnp.float32),
+                          w.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        out = (part * st.scales.astype(jnp.float32)[None]).sum(axis=2)
+        out = out.transpose(0, 1, 2).reshape(-1, out_f) if out.ndim == 3 else out
+        out = out.reshape(xb.shape[0], out_f)
+        return out.astype(x.dtype).reshape(*lead, tokens, out_f)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused attention (MODE-0). q (b,hq,sq,d), k/v (b,hkv,skv,d)."""
+    if impl == "auto":
+        impl = "pallas" if _ON_TPU else "xla"
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale,
+            interpret=not _ON_TPU)
+    if impl == "xla":
+        if k.shape[2] >= 2048:
+            # chunked flash recurrence: O(chunk^2) temporaries instead of
+            # O(s^2) — the dense oracle at 32k context costs ~TB/device
+            from repro.kernels.xla_attention import attention_chunked
+            return attention_chunked(q, k, v, causal=causal, window=window,
+                                     scale=scale)
+        return _ref.attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    length: jax.Array | int,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """One-token decode attention against a preallocated KV cache.
+
+    The XLA path is used in the distributed serve_step (the KV length mask
+    keeps addresses static under jit — the paper's MAX-token trick).
+    """
+    if impl == "auto":
+        impl = "xla"  # decode favors the XLA path even on TPU: tiny q
+    return _ref.decode_attention_ref(
+        q, k_cache, v_cache, length, window=window, scale=scale)

@@ -1,0 +1,163 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).  They
+are deliberately written in the most obvious dense form — readability over
+speed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor, dequantize
+from repro.core.sparsity import SparseQuantizedTensor, sparse_dequantize
+
+__all__ = [
+    "w4a16_matmul_ref",
+    "sparse_w4a16_matmul_ref",
+    "attention_ref",
+    "decode_attention_ref",
+]
+
+
+def w4a16_matmul_ref(x: jax.Array, qt: QuantizedTensor) -> jax.Array:
+    """Group-exact oracle of the FP16*INT4 unit (EdgeLLM MODE-1).
+
+    Matches the kernel's numerics exactly: per 128-group integer-exact bf16
+    matmul with f32 accumulation, scale applied to the per-group partial sum
+    (the paper's Stage-3 Scale multiply).
+    """
+    in_f, out_f = qt.shape
+    g = qt.group_size
+    q = dequantize(
+        QuantizedTensor(qt.packed, jnp.ones_like(qt.scales), qt.shape, g),
+        jnp.bfloat16,
+    )  # integer values, exactly representable in bf16
+    xg = x.reshape(*x.shape[:-1], in_f // g, g)
+    qg = q.reshape(in_f // g, g, out_f)
+    # f32 upcast is exact for bf16 inputs; avoids CPU DotThunk gaps while
+    # matching MXU bf16xbf16->f32 numerics bit for bit.
+    partial = jnp.einsum(
+        "...kg,kgo->...ko", xg.astype(jnp.float32), qg.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    out = (partial * qt.scales.astype(jnp.float32)).sum(axis=-2)
+    return out.astype(x.dtype)
+
+
+def sparse_w4a16_matmul_ref(x: jax.Array, st: SparseQuantizedTensor) -> jax.Array:
+    """Oracle for the block-sparse W4A16 matmul: dense matmul against the
+    scattered-back dense weight, with per-group scale-after-dot numerics."""
+    in_f, out_f = st.shape
+    g = st.group_size
+    w = sparse_dequantize(st, jnp.float32)
+    # group-exact like the kernel: separate integer part and scale
+    scales_full = jnp.zeros((in_f // g, out_f), jnp.float32)
+    tiles = jnp.arange(out_f // g)
+    # scatter per-block scales back to (n_blocks, out)
+    sc = jnp.zeros((out_f // g, in_f // g, g), jnp.float32)
+    sc = sc.at[tiles[:, None], st.block_idx].set(st.scales.astype(jnp.float32))
+    scales_full = jnp.transpose(sc, (1, 0, 2)).reshape(in_f // g, out_f)
+    safe = jnp.where(scales_full == 0, 1.0, scales_full)
+    q = (w / jnp.repeat(safe, g, axis=0)).astype(jnp.bfloat16)
+    xg = x.reshape(*x.shape[:-1], in_f // g, g)
+    qg = q.reshape(in_f // g, g, out_f)
+    partial = jnp.einsum(
+        "...kg,kgo->...ko", xg.astype(jnp.float32), qg.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    out = (partial * scales_full).sum(axis=-2)
+    return out.astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    f32_softmax: bool = True,
+) -> jax.Array:
+    """Dense attention oracle (EdgeLLM MODE-0, FP16*FP16 path).
+
+    Shapes: q (b, hq, sq, d), k/v (b, hkv, skv, d) with hq % hkv == 0 (GQA).
+    ``window`` = sliding-window size (Mixtral SWA); None = full.
+    Causal alignment assumes q occupies the *last* sq positions of the skv
+    context (decode-friendly).
+    """
+    from repro.parallel.hints import hint
+
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    rep = hq // hkv
+    if rep > 1:
+        # jnp.repeat breaks SPMD head-sharding propagation — re-pin the
+        # repeated K/V and the score matrix to the model axis (16x
+        # replicated attention FLOPs otherwise; EXPERIMENTS.md §Perf it.1)
+        k = hint(jnp.repeat(k, rep, axis=1), "batch", "heads", None, None)
+        v = hint(jnp.repeat(v, rep, axis=1), "batch", "heads", None, None)
+    q = hint(q, "batch", "heads", None, None)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = hint(logits, "batch", "heads", None, None)
+    skv = k.shape[2]
+    q_pos = jnp.arange(sq) + (skv - sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    if not f32_softmax:
+        logits = logits.astype(q.dtype).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd",
+                     probs.astype(q.dtype).astype(jnp.float32),
+                     v.astype(jnp.float32))
+    out = hint(out.astype(q.dtype), "batch", "heads", None, None)
+    return out
+
+
+def decode_attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    length: jax.Array | int,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-step decode attention oracle.
+
+    q (b, hq, 1, d); caches (b, hkv, max_len, d); ``length`` = #valid tokens
+    (the new token's position is length - 1).
+    """
+    from repro.parallel.hints import hint
+
+    b, hq, _, d = q.shape
+    hkv, max_len = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    # decode = flash-decoding layout: KV sequence stays sharded over the
+    # model axis; the softmax reductions below become model-axis collectives
+    k = jnp.repeat(k_cache, rep, axis=1) if rep > 1 else k_cache
+    v = jnp.repeat(v_cache, rep, axis=1) if rep > 1 else v_cache
+    k = hint(k, "batch", None, "seq_mp", None)
+    v = hint(v, "batch", None, "seq_mp", None)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = hint(logits, "batch", None, None, "seq_mp")
+    pos = jnp.arange(max_len)
+    valid = pos[None, :] < jnp.asarray(length).reshape(-1, 1)
+    if window is not None:
+        valid &= pos[None, :] >= (jnp.asarray(length).reshape(-1, 1) - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd",
+                     probs.astype(q.dtype).astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)

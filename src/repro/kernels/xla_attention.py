@@ -1,0 +1,121 @@
+"""Memory-efficient attention in pure XLA (the dry-run / CPU twin of the
+Pallas flash kernel).
+
+Dense ``softmax(QKᵀ)V`` materializes the (sq × skv) score matrix — at the
+prefill_32k cell that is up to 1.5 TB/device of temporaries (measured,
+EXPERIMENTS.md §Perf it.6).  This implementation is the standard
+flash-attention recurrence expressed with ``lax.scan`` over KV chunks:
+
+* outer loop over Q chunks is a *python* loop, so each Q chunk gets its own
+  statically-sized KV scan — causal masking prunes whole KV chunks at trace
+  time (true FLOP skipping, like the Pallas kernel's ``pl.when`` guard),
+  and sliding windows (Mixtral SWA) prune both ends;
+* the inner scan carries (m, l, acc) running softmax statistics in f32;
+* peak temp = O(sq_chunk × kv_chunk) per head — a few hundred MB at 32k
+  instead of hundreds of GB.
+
+Numerics match ``attention_ref`` to bf16 tolerance (tested in
+tests/test_kernels.py::TestXlaChunkedAttention).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.hints import hint
+
+_NEG_INF = -1e30
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    chunk_q: int = 1024,
+    chunk_kv: int = 1024,
+) -> jax.Array:
+    """q (b,hq,sq,d), k/v (b,hkv,skv,d); GQA via repeat.  Causal alignment:
+    q occupies the last sq positions of the skv context."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if rep > 1:
+        k = hint(jnp.repeat(k, rep, axis=1), "batch", "heads", None, None)
+        v = hint(jnp.repeat(v, rep, axis=1), "batch", "heads", None, None)
+    q = hint(q, "batch", "heads", None, None)
+    scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
+    q_offset = skv - sq
+
+    cq = min(chunk_q, sq)
+    ck = min(chunk_kv, skv)
+    # pad seq dims to chunk multiples
+    pad_q = (-sq) % cq
+    pad_k = (-skv) % ck
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    n_q = q.shape[2] // cq
+    n_k = k.shape[2] // ck
+
+    qf = q.astype(jnp.float32)
+
+    def q_chunk_out(iq: int) -> jax.Array:
+        q_blk = jax.lax.dynamic_slice_in_dim(qf, iq * cq, cq, axis=2)
+        q_start = q_offset + iq * cq
+        q_end = q_start + cq - 1
+        # static chunk pruning (trace-time): causal upper bound, window lower
+        hi = n_k if not causal else min(n_k, (q_end // ck) + 1)
+        lo = 0
+        if window is not None:
+            lo = max(0, (q_start - window + 1) // ck)
+        hi = max(hi, lo + 1)
+        idxs = jnp.arange(lo, hi)
+
+        def body(carry, ik):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ik * ck, ck, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ik * ck, ck, axis=2)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk,
+                           k_blk.astype(jnp.float32)) * scale_v
+            q_pos = q_start + jnp.arange(cq)
+            k_pos = ik * ck + jnp.arange(ck)
+            mask = jnp.ones((cq, ck), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            # mask out kv padding
+            mask &= (k_pos < skv)[None, :]
+            s = jnp.where(mask[None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v_blk.dtype),
+                            v_blk).astype(jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hq, cq), _NEG_INF, jnp.float32),
+            jnp.zeros((b, hq, cq), jnp.float32),
+            jnp.zeros((b, hq, cq, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(body, init, idxs)
+        l = jnp.where(l == 0, 1.0, l)
+        return (acc / l[..., None]).astype(q.dtype)
+
+    outs = [q_chunk_out(i) for i in range(n_q)]
+    out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)
+    if pad_q:
+        out = out[:, :, :sq]
+    return hint(out, "batch", "heads", None, None)

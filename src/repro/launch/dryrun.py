@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and dump memory/cost/collective artifacts.
+
+The two lines above MUST stay first — jax locks the device count at first
+init.  Do not import this module from tests (it would poison their device
+count); it is a __main__ entry point only.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape decode_32k \
+        [--multi-pod] [--quant dense|strategy2|none] [--out artifacts/]
+    python -m repro.launch.dryrun --all [--multi-pod] --out artifacts/
+        (spawns one subprocess per cell for isolation)
+
+Each cell writes ``<out>/<arch>__<shape>__<mesh>__<quant>.json`` with:
+memory_analysis, cost_analysis (per-device FLOPs/bytes), collective stats
+parsed from the optimized HLO, the three roofline terms and MODEL_FLOPS.
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, quant: str | None,
+             outdir: str, accum_steps: int = 8, remat: str | None = None,
+             tag_suffix: str = "", kv_quant: str | None = None) -> dict:
+    import jax
+    from repro.configs import get_config, skip_reason
+    from repro.configs.shapes import SHAPES
+    from repro.launch import steps
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import analysis as ra
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape}__{mesh_name}__{quant or 'bf16'}{tag_suffix}"
+    record: dict = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "quant": quant or "bf16", "status": "pending",
+        "accum_steps": accum_steps, "remat": remat, "tag": tag,
+    }
+
+    reason = skip_reason(arch, shape)
+    if reason:
+        record.update(status="skipped", reason=reason)
+        _dump(outdir, tag, record)
+        return record
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.size
+        overrides = {}
+        if remat:
+            overrides["remat"] = remat
+        if kv_quant:
+            overrides["kv_quant"] = kv_quant
+        cfg = get_config(arch, **overrides)
+        cell = SHAPES[shape]
+        t0 = time.time()
+        bundle = steps.build_cell(arch, shape, mesh, quant=quant,
+                                  accum_steps=accum_steps,
+                                  cfg_overrides=overrides or None)
+        lowered = steps.lower_cell(bundle, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        print(f"[{tag}] memory_analysis:", mem, flush=True)
+        cost = compiled.cost_analysis()
+        print(f"[{tag}] cost_analysis flops={cost.get('flops')} "
+              f"bytes={cost.get('bytes accessed')}", flush=True)
+        hlo = compiled.as_text()
+        # loop-aware HLO cost model (cost_analysis counts while bodies once)
+        from repro.roofline.hlo_parser import analyze_hlo
+        parsed = analyze_hlo(hlo)
+
+        roof = ra.Roofline(
+            flops=float(parsed["flops"]),
+            hbm_bytes=float(parsed["mem_bytes"]),
+            collective_bytes=float(parsed["collective_wire_bytes"]),
+        )
+        record.update(
+            status="ok",
+            n_devices=n_dev,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory_analysis={
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "peak_bytes_est": int(mem.argument_size_in_bytes
+                                      + mem.output_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+            },
+            cost_analysis={k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float)) and not k.startswith("bytes accessed operand")},
+            hlo_cost={k: v for k, v in parsed.items() if k != "collectives"},
+            collectives=parsed["collectives"],
+            roofline=roof.as_dict(),
+            model_flops=ra.model_flops(cfg, cell, n_dev),
+            hlo_bytes=len(hlo),
+        )
+        if os.environ.get("REPRO_SAVE_HLO"):
+            import zstandard
+            os.makedirs(outdir, exist_ok=True)
+            with open(os.path.join(outdir, f"{tag}.hlo.zst"), "wb") as fz:
+                fz.write(zstandard.ZstdCompressor(level=9).compress(
+                    hlo.encode()))
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    _dump(outdir, tag, record)
+    return record
+
+
+def _dump(outdir: str, tag: str, record: dict) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"{tag}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    print(f"[{tag}] -> {record['status']} ({path})", flush=True)
+
+
+def _spawn_all(multi_pod: bool, quant: str | None, outdir: str,
+               skip_existing: bool, jobs: int = 1) -> None:
+    from repro.configs import ARCHS
+    from repro.configs.shapes import SHAPES
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cells = [(a, s) for a in ARCHS for s in SHAPES]
+    procs: list = []
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__{mesh_name}__{quant or 'bf16'}"
+        path = os.path.join(outdir, f"{tag}.json")
+        if skip_existing and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        print(f"[{tag}] cached, skipping", flush=True)
+                        continue
+            except Exception:
+                pass
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", outdir]
+        if multi_pod:
+            cmd.append("--multi-pod")
+        if quant:
+            cmd += ["--quant", quant]
+        while len([p for p in procs if p.poll() is None]) >= jobs:
+            time.sleep(2)
+        print(f"[driver] launching {tag}", flush=True)
+        procs.append(subprocess.Popen(cmd))
+    for p in procs:
+        p.wait()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default="default",
+                    help="none|dense|strategy1|strategy2|strategy3; "
+                         "default = dense for serve shapes")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--jobs", type=int, default=1)
+    ap.add_argument("--no-skip-existing", action="store_true")
+    ap.add_argument("--accum", type=int, default=8)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--kv-quant", default=None, help="none|int8 KV cache")
+    args = ap.parse_args()
+
+    quant = {"default": "dense", "none": None}.get(args.quant, args.quant)
+    if args.all:
+        _spawn_all(args.multi_pod, quant, args.out,
+                   skip_existing=not args.no_skip_existing, jobs=args.jobs)
+        return
+    if not (args.arch and args.shape):
+        ap.error("--arch and --shape required (or --all)")
+    rec = run_cell(args.arch, args.shape, args.multi_pod, quant, args.out,
+                   accum_steps=args.accum, remat=args.remat,
+                   tag_suffix=args.tag, kv_quant=args.kv_quant)
+    if rec["status"] == "error":
+        print(rec.get("traceback", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""Step builders: (arch × shape × mesh × mode) -> jit-able fn + ShapeDtypeStruct
+inputs + shardings.  Everything is shape-level (jax.eval_shape) — no arrays
+are ever allocated, which is what lets the 512-device dry-run lower
+mixtral-8x22b training on a CPU host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, skip_reason
+from repro.configs.shapes import SHAPES, ShapeCell
+from repro.core import compiler as core_compiler
+from repro.models import api
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.parallel import sharding as shd
+from repro.train import trainer
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; shannon/kernels pattern)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Model inputs for one shape cell, as weak-type-correct structs."""
+    b, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), jnp.float32)
+        return specs
+    if cell.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), jnp.float32)
+        return specs
+    if cell.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "lengths": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(cell.kind)
+
+
+def cache_len_for(cfg: ModelConfig, cell: ShapeCell) -> int:
+    """KV cache length: SWA archs cap at the window (rolling buffer)."""
+    if cfg.window is not None:
+        return min(cell.seq_len, cfg.window)
+    return cell.seq_len
+
+
+# ---------------------------------------------------------------------------
+# per-mode step builders
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower one cell."""
+    fn: Callable
+    args: tuple                      # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def _params_shape(cfg: ModelConfig, dtype=None):
+    c = dataclasses.replace(cfg, dtype=dtype) if dtype is not None else cfg
+    return jax.eval_shape(lambda: api.init_params(c, jax.random.PRNGKey(0)))
+
+
+def build_train(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                accum_steps: int = 8) -> StepBundle:
+    opt = AdamW(lr=cosine_schedule(3e-4, 100, 10_000))
+    params_shape = _params_shape(cfg, jnp.float32)
+    grad_specs = shd.param_specs(params_shape, mesh, "train")
+    step = trainer.make_train_step(cfg, opt, accum_steps=accum_steps,
+                                   grad_specs=grad_specs)
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    batch_shape = input_specs(cfg, cell)
+    rng_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    p_sh = shd.shardings_for(params_shape, mesh, "train")
+    o_sh = shd.shardings_for(opt_shape, mesh, "train")
+    b_sh = shd.batch_shardings(batch_shape, mesh)
+    r_sh = NamedSharding(mesh, P())
+    m_sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()),
+        jax.eval_shape(step, params_shape, opt_shape, batch_shape, rng_shape)[2])
+
+    return StepBundle(
+        fn=step,
+        args=(params_shape, opt_shape, batch_shape, rng_shape),
+        in_shardings=(p_sh, o_sh, b_sh, r_sh),
+        out_shardings=(p_sh, o_sh, m_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+def _serve_params_shape(cfg: ModelConfig, quant: str | None):
+    base = _params_shape(cfg)             # cfg.dtype (bf16)
+    if quant is None:
+        return base
+    return jax.eval_shape(
+        functools.partial(core_compiler.quantize_model, strategy=quant), base)
+
+
+def build_prefill(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                  quant: str | None = None) -> StepBundle:
+    max_len = cache_len_for(cfg, cell)
+    params_shape = _serve_params_shape(cfg, quant)
+    batch_shape = input_specs(cfg, cell)
+
+    def fn(params, batch):
+        return api.prefill(cfg, params, batch, max_len)
+
+    p_sh = shd.shardings_for(params_shape, mesh, "serve")
+    b_sh = shd.batch_shardings(batch_shape, mesh)
+    out_shape = jax.eval_shape(fn, params_shape, batch_shape)
+    logits_sh = shd.batch_shardings(out_shape[0], mesh)
+    cache_sh = shd.kv_cache_specs(out_shape[1], mesh, cell.global_batch)
+
+    return StepBundle(
+        fn=fn,
+        args=(params_shape, batch_shape),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(logits_sh, cache_sh),
+    )
+
+
+def build_decode(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                 quant: str | None = None) -> StepBundle:
+    max_len = cache_len_for(cfg, cell)
+    b = cell.global_batch
+    params_shape = _serve_params_shape(cfg, quant)
+    cache_shape = jax.eval_shape(
+        lambda: api.init_cache(cfg, b, max_len))
+    specs = input_specs(cfg, cell)
+
+    def fn(params, cache, tokens, lengths):
+        return api.decode_step(cfg, params, cache, tokens, lengths)
+
+    p_sh = shd.shardings_for(params_shape, mesh, "serve")
+    c_sh = shd.kv_cache_specs(cache_shape, mesh, b)
+    t_sh = shd.batch_shardings(specs["tokens"], mesh)
+    l_sh = NamedSharding(mesh, P())
+    out_shape = jax.eval_shape(fn, params_shape, cache_shape,
+                               specs["tokens"], specs["lengths"])
+    logits_sh = shd.batch_shardings(out_shape[0], mesh)
+
+    return StepBundle(
+        fn=fn,
+        args=(params_shape, cache_shape, specs["tokens"], specs["lengths"]),
+        in_shardings=(p_sh, c_sh, t_sh, l_sh),
+        out_shardings=(logits_sh, c_sh),
+        donate_argnums=(1,),
+    )
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh, *,
+               quant: str | None = "dense", accum_steps: int = 8,
+               cfg_overrides: dict | None = None) -> StepBundle:
+    """quant: None = bf16 serving; 'dense' = paper W4A16; 'strategyN' =
+    W4A16 + log-scale sparsity (serving modes only — training is bf16)."""
+    reason = skip_reason(arch, shape)
+    if reason:
+        raise ValueError(f"cell ({arch}, {shape}) skipped: {reason}")
+    cfg = get_config(arch, **(cfg_overrides or {}))
+    cell = SHAPES[shape]
+    if cell.kind == "train":
+        return build_train(cfg, cell, mesh, accum_steps=accum_steps)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, cell, mesh, quant=quant)
+    return build_decode(cfg, cell, mesh, quant=quant)
+
+
+def lower_cell(bundle: StepBundle, mesh: Mesh):
+    """jit + lower (no compile) under the mesh (+ activation-hint context)."""
+    from repro.parallel.hints import use_mesh
+
+    jitted = jax.jit(
+        bundle.fn,
+        in_shardings=bundle.in_shardings,
+        out_shardings=bundle.out_shardings,
+        donate_argnums=bundle.donate_argnums,
+    )
+    with use_mesh(mesh):
+        return jitted.lower(*bundle.args)

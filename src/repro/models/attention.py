@@ -1,0 +1,240 @@
+"""Attention module: GQA/MQA, RoPE/M-RoPE, qk-norm, SWA, KV cache.
+
+Train/prefill path goes through ``ops.attention`` (Pallas flash kernel on
+TPU, dense oracle on CPU); decode path uses ``ops.decode_attention`` against
+a preallocated MAX-token cache (the paper's static-address trick, §IV-B).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import layers
+from repro.models.layers import Params, dense_init, linear
+
+
+def attn_init(key, cfg, d_model: int | None = None) -> Params:
+    d = d_model or cfg.d_model
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, hq * hd, cfg.dtype),
+        "wk": dense_init(ks[1], d, hkv * hd, cfg.dtype),
+        "wv": dense_init(ks[2], d, hkv * hd, cfg.dtype),
+        "wo": dense_init(ks[3], hq * hd, d, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), cfg.dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.dtype)
+    return p
+
+
+def _project_qkv(cfg, p: Params, x: jax.Array, positions):
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    uk = cfg.use_kernels
+    q = linear(x, p["wq"], p.get("bq"), use_kernels=uk).reshape(b, s, hq, hd)
+    k = linear(x, p["wk"], p.get("bk"), use_kernels=uk).reshape(b, s, hkv, hd)
+    v = linear(x, p["wv"], p.get("bv"), use_kernels=uk).reshape(b, s, hkv, hd)
+    q = q.transpose(0, 2, 1, 3)   # (b, h, s, d)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"])
+        k = layers.rmsnorm(k, p["k_norm"])
+    if cfg.rope_type == "standard":
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_type == "mrope":
+        q = layers.apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = layers.apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def attn_apply(cfg, p: Params, x: jax.Array, positions, *,
+               causal: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    o = ops.attention(q, k, v, causal=causal, window=cfg.window,
+                      impl="pallas" if cfg.use_kernels else "xla")
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return linear(o, p["wo"], use_kernels=cfg.use_kernels)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, d_model=None) -> Params:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_quant == "int8":
+        # per-(token, head) absmax scale over head_dim — the paper's
+        # block-scale packing applied to the dynamic operand (beyond-paper)
+        return {
+            "k": jnp.zeros((batch, hkv, max_len, hd), jnp.int8),
+            "v": jnp.zeros((batch, hkv, max_len, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, hkv, max_len, 1), jnp.float32),
+            "v_scale": jnp.zeros((batch, hkv, max_len, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, hkv, max_len, hd), cfg.dtype),
+        "v": jnp.zeros((batch, hkv, max_len, hd), cfg.dtype),
+    }
+
+
+def quantize_kv(t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(…, hd) -> int8 values + per-vector absmax scale."""
+    a = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(a / 127.0, 1e-10)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attn_prefill(cfg, p: Params, x: jax.Array, positions, cache: Params):
+    """Prefill: run full attention AND populate the cache.
+
+    With a sliding-window (rolling) cache smaller than the prompt, only the
+    last ``cache_len`` tokens' K/V are retained — exactly the set SWA decode
+    will ever attend to."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    o = ops.attention(q, k, v, causal=True, window=cfg.window,
+                      impl="pallas" if cfg.use_kernels else "xla")
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = linear(o, p["wo"], use_kernels=cfg.use_kernels)
+    cache_len = cache["k"].shape[2]
+    if cache_len < s:
+        k = k[:, :, -cache_len:]
+        v = v[:, :, -cache_len:]
+    if cfg.kv_quant == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                    (0, 0, 0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                    (0, 0, 0, 0)),
+        }
+        return out, cache
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, 0, 0)),
+    }
+    return out, cache
+
+
+def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
+                lengths: jax.Array):
+    """One-token decode.  x (b, 1, d); lengths (b,) = context length
+    *including* the new token."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    # write the new K/V at position lengths-1 (static max-token addressing).
+    lengths = jnp.asarray(lengths)
+    cache_len = cache["k"].shape[2]
+    rolling = cfg.window is not None and cache_len <= cfg.window
+
+    # shard_map flash-decoding: cache stays sequence-sharded, LSE merge
+    # across shards (EXPERIMENTS.md §Perf qwen3-decode)
+    from repro.parallel import decode_attn
+    from repro.parallel.hints import active_mesh
+    mesh = active_mesh()
+    if decode_attn.usable(mesh, b, cfg.n_heads, cfg.n_kv_heads,
+                          cache_len, lengths):
+        scales = ((cache["k_scale"], cache["v_scale"])
+                  if cfg.kv_quant == "int8" else None)
+        o, new_cache = decode_attn.decode_attention_sharded(
+            q, k, v, cache["k"], cache["v"], lengths, mesh, rolling=rolling,
+            scales=scales)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        out = linear(o, p["wo"], use_kernels=cfg.use_kernels)
+        return out, new_cache
+    if rolling:
+        # SWA rolling buffer: slot = (pos mod window).  RoPE is applied
+        # before caching, and softmax is permutation-invariant, so slot
+        # order inside the buffer is irrelevant.
+        write_idx = (lengths - 1) % cache_len
+        attn_len = jnp.minimum(lengths, cache_len)
+        attn_window = None          # every valid slot participates
+    else:
+        write_idx = lengths - 1
+        attn_len = lengths
+        attn_window = cfg.window
+    if cfg.kv_quant == "int8":
+        # fallback (unsharded) path: quantized write + dequantized attention
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        widx = write_idx if lengths.ndim == 0 else write_idx[0]
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, widx, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, widx, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, 0, widx, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, 0, widx, 0)),
+        }
+        k_full = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_full = dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+        o = ops.decode_attention(q, k_full, v_full, attn_len,
+                                 window=attn_window)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        out = linear(o, p["wo"], use_kernels=cfg.use_kernels)
+        return out, new_cache
+    if lengths.ndim == 0:
+        # common serving case (uniform batch): O(1) in-place slice update
+        k_new = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, write_idx, 0))
+        v_new = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, write_idx, 0))
+    else:
+        # ragged batch: per-row scatter via vmap'd slice update
+        def upd(c, new, l):
+            return jax.lax.dynamic_update_slice(c, new, (0, l, 0))
+        k_new = jax.vmap(upd)(cache["k"], k.astype(cache["k"].dtype), write_idx)
+        v_new = jax.vmap(upd)(cache["v"], v.astype(cache["v"].dtype), write_idx)
+    o = ops.decode_attention(q, k_new, v_new, attn_len, window=attn_window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    out = linear(o, p["wo"], use_kernels=cfg.use_kernels)
+    return out, {"k": k_new, "v": v_new}
+
+
+# -- cross attention (Whisper decoder) --------------------------------------
+
+def cross_attn_init(key, cfg) -> Params:
+    return attn_init(key, cfg)
+
+
+def cross_attn_apply(cfg, p: Params, x: jax.Array, enc_kv: tuple) -> jax.Array:
+    """x (b, s, d) attends to precomputed encoder K/V (b, hkv, s_enc, hd)."""
+    b, s, _ = x.shape
+    hd, hq = cfg.head_dim, cfg.n_heads
+    q = linear(x, p["wq"], p.get("bq"), use_kernels=cfg.use_kernels)
+    q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k, v = enc_kv
+    o = ops.attention(q, k, v, causal=False,
+                      impl="pallas" if cfg.use_kernels else "xla")
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+    return linear(o, p["wo"], use_kernels=cfg.use_kernels)
+
+
+def cross_kv(cfg, p: Params, enc_out: jax.Array) -> tuple:
+    """Precompute cross-attention K/V from encoder output (done once)."""
+    b, s, _ = enc_out.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = linear(enc_out, p["wk"], p.get("bk"), use_kernels=cfg.use_kernels)
+    v = linear(enc_out, p["wv"], p.get("bv"), use_kernels=cfg.use_kernels)
+    return (k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3),
+            v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3))

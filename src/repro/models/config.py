@@ -1,0 +1,140 @@
+"""Model configuration dataclass shared by every architecture."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config describes any architecture in the zoo.
+
+    Family selects the block assembly:
+      dense  — decoder-only transformer
+      moe    — dense with MoE FFN
+      ssm    — xLSTM stack (sLSTM + mLSTM blocks)
+      hybrid — Zamba2: Mamba2 backbone + shared attention block
+      audio  — Whisper encoder-decoder (conv frontend stubbed)
+      vlm    — Qwen2-VL backbone (patch frontend stubbed, M-RoPE)
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+
+    activation: str = "swiglu"        # swiglu | geglu | gelu
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_type: str = "standard"       # standard | mrope | none
+    rope_theta: float = 1_000_000.0
+    mrope_sections: tuple[int, ...] = (16, 24, 24)
+    window: int | None = None         # sliding-window attention (Mixtral)
+    tie_embeddings: bool = False
+    embed_scale: bool = False         # Gemma: scale embeddings by sqrt(d)
+    logit_softcap: float | None = None
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # SSM (Mamba2 / xLSTM)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    slstm_every: int = 0              # xLSTM: one sLSTM block every N (0 = none)
+    shared_attn_every: int = 6        # Zamba2: shared attn block cadence
+    n_shared_blocks: int = 2          # Zamba2: number of distinct shared blocks
+
+    # Whisper
+    n_encoder_layers: int = 0
+    encoder_frames: int = 1500
+
+    # KV cache quantization (beyond-paper: EdgeLLM keeps KV FP16; this
+    # extends the block-scale packing to the cache — KIVI-style)
+    kv_quant: str = "none"            # none | int8
+
+    # numerics / execution
+    dtype: Any = jnp.bfloat16
+    remat: str = "block"              # none | block
+    scan_layers: bool = True
+    use_kernels: bool = False         # Pallas path (CPU tests use XLA path)
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_heads % max(self.n_kv_heads, 1):
+            raise ValueError("n_heads must be divisible by n_kv_heads")
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D MODEL_FLOPS)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd, hq, hkv = self.head_dim, self.n_heads, self.n_kv_heads
+        attn = d * hd * hq + 2 * d * hd * hkv + hd * hq * d
+        if self.activation in ("swiglu", "geglu"):
+            ffn = 3 * d * f
+        else:
+            ffn = 2 * d * f
+        if self.is_moe:
+            ffn = self.n_experts * ffn + d * self.n_experts  # + router
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":   # xLSTM blocks
+            per = self._xlstm_block_params()
+            return self.n_layers * per + emb
+        if self.family == "hybrid":
+            mamba = self._mamba_block_params()
+            n_shared = self.n_layers // self.shared_attn_every
+            shared = self.n_shared_blocks * (attn + 3 * d * f)
+            return self.n_layers * mamba + shared + emb
+        if self.family == "audio":
+            enc = self.n_encoder_layers * (attn + ffn)
+            dec = self.n_layers * (2 * attn + ffn)  # self + cross
+            return enc + dec + emb
+        return self.n_layers * (attn + ffn) + emb
+
+    def _mamba_block_params(self) -> int:
+        d, di, n = self.d_model, self.d_inner, self.ssm_state
+        h = self.ssm_heads
+        in_proj = d * (2 * di + 2 * n + h)
+        conv = (di + 2 * n) * self.ssm_conv
+        out_proj = di * d
+        return in_proj + conv + out_proj + 2 * h
+
+    def _xlstm_block_params(self) -> int:
+        d = self.d_model
+        di = 2 * d
+        # mLSTM block: up 2*di, qkv from di, gates, out di*d
+        return d * 2 * di + di * 3 * di // 2 + di * d + 6 * di
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        ffn_all = self.n_experts * 3 * d * f
+        ffn_active = self.top_k * 3 * d * f
+        return self.param_count() - self.n_layers * (ffn_all - ffn_active)

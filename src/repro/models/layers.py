@@ -1,0 +1,183 @@
+"""Shared neural-net layers (functional, pytree params).
+
+Every weight matmul goes through :func:`linear`, which dispatches on the
+parameter type: dense array, :class:`QuantizedTensor` (W4A16 path) or
+:class:`SparseQuantizedTensor` (log-scale sparse path).  This is how the
+paper's technique is a *first-class* feature: quantizing a model for serving
+is a pure pytree transform (see ``repro.core.compiler.quantize_model``) and
+no model code changes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantizedTensor
+from repro.core.sparsity import SparseQuantizedTensor
+from repro.kernels import ops
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_f: int, out_f: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_f)
+    return (jax.random.normal(key, (in_f, out_f), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear dispatch (dense | W4A16 | sparse W4A16)
+# ---------------------------------------------------------------------------
+
+def linear(x: jax.Array, w, b=None, *, use_kernels: bool = False) -> jax.Array:
+    if isinstance(w, QuantizedTensor):
+        y = ops.w4a16_matmul(x, w, impl="pallas" if use_kernels else "xla")
+    elif isinstance(w, SparseQuantizedTensor):
+        y = ops.sparse_w4a16_matmul(x, w, impl="pallas" if use_kernels else "xla")
+    else:
+        # plain compute-dtype dot: the MXU accumulates f32 internally either
+        # way, but preferred_element_type=f32 + cast would put every
+        # backward dx all-reduce in f32 — 2x wire bytes (§Perf it.5)
+        if w.dtype != x.dtype:
+            w = w.astype(x.dtype)
+        y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())))
+        y = y.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_init(cfg, d: int | None = None) -> Params:
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"gamma": jnp.ones((d,), cfg.dtype)}
+    return {"gamma": jnp.ones((d,), cfg.dtype), "beta": jnp.zeros((d,), cfg.dtype)}
+
+
+def apply_norm(cfg, p: Params, x: jax.Array) -> jax.Array:
+    if "beta" in p:
+        return layernorm(x, p["gamma"], p["beta"])
+    return rmsnorm(x, p["gamma"])
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (b, h, s, d); positions (b, s) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                             # (d/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (b,1,s,d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL §3.1).
+
+    positions (3, b, s): temporal / height / width position ids.  The d/2
+    frequency slots are split into ``sections`` (summing to d/2); each section
+    rotates by its own positional stream.  Text tokens carry t == h == w, in
+    which case M-RoPE degenerates to standard RoPE (tested).
+    """
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                             # (half,)
+    # build per-slot position stream: (b, s, half)
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections),
+                        total_repeat_length=half)            # (half,)
+    pos = jnp.transpose(positions, (1, 2, 0)).astype(jnp.float32)  # (b,s,3)
+    pos_per_slot = jnp.take_along_axis(
+        pos, jnp.broadcast_to(sec_id, pos.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1)                                             # (b,s,half)
+    angles = pos_per_slot[:, None] * freqs                   # (b,1,s,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def positions_for(cfg, batch: int, seq: int, offset=0) -> jax.Array:
+    """Canonical position ids for the config's rope type."""
+    base = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    base = jnp.broadcast_to(base, (batch, seq))
+    if cfg.rope_type == "mrope":
+        return jnp.broadcast_to(base[None], (3, batch, seq))
+    return base
+
+
+# ---------------------------------------------------------------------------
+# FFN variants
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "gate": dense_init(ks[0], d, f, cfg.dtype),
+            "up": dense_init(ks[1], d, f, cfg.dtype),
+            "down": dense_init(ks[2], f, d, cfg.dtype),
+        }
+    return {
+        "up": dense_init(ks[0], d, f, cfg.dtype),
+        "up_bias": jnp.zeros((f,), cfg.dtype),
+        "down": dense_init(ks[1], f, d, cfg.dtype),
+        "down_bias": jnp.zeros((d,), cfg.dtype),
+    }
+
+
+def mlp_apply(cfg, p: Params, x: jax.Array) -> jax.Array:
+    uk = cfg.use_kernels
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(linear(x, p["gate"], use_kernels=uk)) * linear(
+            x, p["up"], use_kernels=uk)
+        return linear(h, p["down"], use_kernels=uk)
+    if cfg.activation == "geglu":
+        h = jax.nn.gelu(linear(x, p["gate"], use_kernels=uk),
+                        approximate=True) * linear(x, p["up"], use_kernels=uk)
+        return linear(h, p["down"], use_kernels=uk)
+    h = jax.nn.gelu(linear(x, p["up"], p.get("up_bias"), use_kernels=uk),
+                    approximate=True)
+    return linear(h, p["down"], p.get("down_bias"), use_kernels=uk)

@@ -1,0 +1,179 @@
+"""Mamba2 (SSD) layer — training (chunked scan) + decode (recurrent step).
+
+Used by the Zamba2 hybrid backbone.  The SSD state-space recurrence is
+
+    h_t = exp(dt_t · A) · h_{t-1} + dt_t · B_t ⊗ x_t          (state (H,P,N))
+    y_t = C_t · h_t + D · x_t
+
+Training uses the chunked algorithm (Mamba2 paper §6): intra-chunk quadratic
+attention-like term + inter-chunk state recurrence via ``lax.scan`` over
+chunks.  Decode is the O(1) recurrent update.  All state math runs in f32;
+projections follow the model dtype (and are quantizable — they are static
+weights, so the paper's W4A16 path applies; the scan itself is
+activation-side, like the paper's FP16*FP16 MHA mode — DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, linear, rmsnorm
+
+CHUNK = 128
+
+
+def mamba_init(key, cfg) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * n + h, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), cfg.dtype),
+        "out_proj": dense_init(ks[4], di, d, cfg.dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  xbc (B, L, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def mamba_apply(cfg, p: Params, x: jax.Array) -> jax.Array:
+    """Full-sequence SSD (training/prefill).  x (B, L, d_model)."""
+    bsz, L, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+
+    proj = linear(x, p["in_proj"], use_kernels=cfg.use_kernels)
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(bsz, L, h, ph)
+    B = xbc[..., di:di + n]                                  # (B, L, N), G=1
+    C = xbc[..., di + n:]                                    # (B, L, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, L, H)
+    A = -jnp.exp(p["A_log"])                                 # (H,)
+
+    y = _ssd_chunked(xs.astype(jnp.float32), dt, A,
+                     B.astype(jnp.float32), C.astype(jnp.float32))
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, L, di).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]) * jax.nn.silu(z)
+    return linear(y, p["out_proj"], use_kernels=cfg.use_kernels)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a (..., Q) -> (..., Q, Q) lower-tri pairwise sums: out[i,j]=sum(a[j+1..i])."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]               # sum(a[j+1..i])
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(xs, dt, A, B, C, chunk: int = CHUNK):
+    """Chunked SSD.  xs (b,L,H,P) f32; dt (b,L,H); A (H,); B,C (b,L,N)."""
+    b, L, h, ph = xs.shape
+    n = B.shape[-1]
+    q = min(chunk, L)
+    nc = L // q
+    assert L % q == 0, (L, q)
+
+    xs_c = xs.reshape(b, nc, q, h, ph)
+    dt_c = dt.reshape(b, nc, q, h)
+    B_c = B.reshape(b, nc, q, n)
+    C_c = C.reshape(b, nc, q, n)
+
+    a_c = dt_c * A[None, None, None, :]                      # (b,nc,q,h) log-decay
+    seg = _segsum(jnp.moveaxis(a_c, -1, 2))                  # (b,nc,h,q,q)
+    Lmat = jnp.exp(seg)
+
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i·B_j) L[i,j] dt_j x_j
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)             # (b,nc,q,q)
+    w = cb[:, :, None] * Lmat * dt_c.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", w, xs_c)
+
+    # chunk-final states: S_c = sum_j exp(acum_last - acum_j) dt_j B_j x_j^T
+    acum = jnp.cumsum(a_c, axis=2)                           # (b,nc,q,h)
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)        # (b,nc,q,h)
+    S = jnp.einsum("bcqh,bcqn,bcqhp->bchnp",
+                   decay_to_end * dt_c, B_c, xs_c)           # (b,nc,h,n,p)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(acum[:, :, -1, :])                 # (b,nc,h)
+
+    def step(hprev, inp):
+        dec, s = inp                                          # (b,h), (b,h,n,p)
+        hnew = hprev * dec[..., None, None] + s
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, n, ph), jnp.float32)
+    _, hstates = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S, 1, 0)))
+    hstates = jnp.moveaxis(hstates, 0, 1)                    # (b,nc,h,n,p) state BEFORE chunk
+
+    # inter-chunk output: Y[i] += C_i · (exp(acum_i) * H_c)
+    in_decay = jnp.exp(acum)                                 # (b,nc,q,h)
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", C_c, hstates, in_decay)
+    return (y_intra + y_inter).reshape(b, L, h, ph)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def mamba_cache_init(cfg, batch: int) -> Params:
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), cfg.dtype),
+        "state": jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba_decode(cfg, p: Params, x: jax.Array, cache: Params):
+    """One token.  x (B, 1, d_model)."""
+    bsz = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+
+    proj = linear(x, p["in_proj"], use_kernels=cfg.use_kernels)
+    z, xbc, dt = _split_proj(cfg, proj)                      # (B,1,*)
+    window = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+    conv_out = (window * p["conv_w"][None]).sum(axis=1, keepdims=True)
+    xbc = jax.nn.silu(conv_out + p["conv_b"][None, None, :])
+    new_conv = window[:, 1:, :]
+
+    xs = xbc[..., :di].reshape(bsz, h, ph)
+    B = xbc[..., di:di + n].reshape(bsz, n)
+    C = xbc[..., di + n:].reshape(bsz, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32).reshape(bsz, h) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dt * A)                                  # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, B, xs.astype(jnp.float32))
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C, state)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]) * jax.nn.silu(z)
+    out = linear(y, p["out_proj"], use_kernels=cfg.use_kernels)
+    return out, {"conv": new_conv, "state": state}

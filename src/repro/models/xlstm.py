@@ -1,0 +1,327 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) + sLSTM (scalar
+memory, strictly recurrent).  [arXiv:2405.04517]
+
+xlstm-1.3b stacks 48 residual blocks; following the paper's 7:1 recipe one
+block in every ``slstm_every`` is sLSTM, the rest mLSTM.
+
+* mLSTM training uses the stabilized quadratic parallel form (an
+  attention-like (L×L) score matrix gated by cumulative log-forget-gates);
+  decode is the O(1) recurrent update of the (dh×dh) matrix memory C, the
+  normalizer n and the stabilizer m.
+* sLSTM is not parallelizable across time (hidden-state feedback inside the
+  exponential gates) — training runs a ``lax.scan`` over the sequence, which
+  is the honest form (the xLSTM paper says the same).
+
+All recurrent/state math is f32; projections are model-dtype and
+quantizable (W4A16) — EdgeLLM's FFN-side technique applies to every static
+matmul here even though the MHA-side (FP16×FP16 KV) unit has no work in this
+family (DESIGN.md §4 arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, linear, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg) -> Params:
+    d = cfg.d_model
+    di = 2 * d                       # projection factor 2
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": jnp.ones((d,), cfg.dtype),
+        "up_x": dense_init(ks[0], d, di, cfg.dtype),
+        "up_z": dense_init(ks[1], d, di, cfg.dtype),
+        "wq": dense_init(ks[2], di, di, cfg.dtype),
+        "wk": dense_init(ks[3], di, di, cfg.dtype),
+        "wv": dense_init(ks[4], di, di, cfg.dtype),
+        "w_i": dense_init(ks[5], di, h, cfg.dtype, scale=0.01),
+        "w_f": dense_init(ks[6], di, h, cfg.dtype, scale=0.01),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # open forget gates at init
+        "out_norm": jnp.ones((di,), cfg.dtype),
+        "down": dense_init(jax.random.fold_in(key, 9), di, d, cfg.dtype),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Stabilized parallel mLSTM.  q/k/v (b,h,L,dh) f32; gates (b,h,L) f32."""
+    b, h, L, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_gate)                        # (b,h,L)
+    fcum = jnp.cumsum(logf, axis=-1)                         # sum_{1..t}
+    # D[i,j] = sum_{k=j+1..i} logf_k + i_j  (j <= i)
+    D = fcum[..., :, None] - fcum[..., None, :] + i_gate[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(mask, D, -jnp.inf)
+    m = jnp.max(D, axis=-1, keepdims=True)                   # (b,h,L,1)
+    m = jnp.maximum(m, -1e30)                                # rows with all -inf
+    S = jnp.einsum("bhid,bhjd->bhij", q, k) / math.sqrt(dh)
+    W = S * jnp.exp(D - m)
+    norm = jnp.maximum(jnp.abs(W.sum(-1, keepdims=True)), jnp.exp(-m))
+    return jnp.einsum("bhij,bhjd->bhid", W / norm, v)
+
+
+MLSTM_CHUNK = 256
+
+
+def _mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int = MLSTM_CHUNK):
+    """Chunkwise-parallel stabilized mLSTM — same math as the recurrence /
+    quadratic parallel form (tested equal), O(L·C) memory instead of O(L²).
+
+    Per chunk with incoming state (Ĉ, n̂, m0) and local cumulative
+    log-forget b_t:
+
+        m_t   = max(b_t + m0, max_{j≤t}(b_t − b_j + i_j))
+        h_t   = [e^{b_t+m0−m_t}(q_t·Ĉ) + Σ_j S_tj e^{D_tj−m_t} v_j] / den_t
+        den_t = max(|e^{b_t+m0−m_t}(q_t·n̂) + Σ_j (q_t·k_j/√d) e^{D_tj−m_t}|,
+                    e^{−m_t})
+        D_tj  = b_t − b_j + i_j  (j ≤ t)
+
+    and the outgoing state takes t = C.  This is the xLSTM chunkwise form —
+    the memory fix for the train_4k cell (EXPERIMENTS.md §Perf xlstm)."""
+    b, h, L, dh = q.shape
+    c = min(chunk, L)
+    pad = (-L) % c
+    if pad:
+        z3 = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        z2 = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad)))
+        q, k, v = z3(q), z3(k), z3(v)
+        i_gate = z2(i_gate) - 1e30 * (jnp.arange(L + pad) >= L)  # dead inputs
+        f_gate = z2(f_gate)
+    nc = (L + pad) // c
+
+    def to_chunks(t, feat):
+        if feat:
+            return jnp.moveaxis(t.reshape(b, h, nc, c, dh), 2, 0)
+        return jnp.moveaxis(t.reshape(b, h, nc, c), 2, 0)
+
+    qs, ks, vs = to_chunks(q, True), to_chunks(k, True), to_chunks(v, True)
+    igs, fgs = to_chunks(i_gate, False), to_chunks(f_gate, False)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def body(carry, inp):
+        C0, n0, m0 = carry                                  # (b,h,dh,dh) ...
+        qc, kc, vc, ic, fc = inp
+        logf = jax.nn.log_sigmoid(fc)                        # (b,h,c)
+        bcum = jnp.cumsum(logf, axis=-1)
+        D = bcum[..., :, None] - bcum[..., None, :] + ic[..., None, :]
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = jnp.max(D, axis=-1)                        # (b,h,c)
+        m_t = jnp.maximum(bcum + m0[..., None], m_intra)
+        m_t = jnp.maximum(m_t, -1e30)
+
+        S = jnp.einsum("bhid,bhjd->bhij", qc, kc) / math.sqrt(dh)
+        W = S * jnp.exp(D - m_t[..., None])
+        carry_scale = jnp.exp(bcum + m0[..., None] - m_t)    # (b,h,c)
+        num = (carry_scale[..., None] * jnp.einsum("bhid,bhde->bhie", qc, C0)
+               + jnp.einsum("bhij,bhjd->bhid", W, vc))
+        den = (carry_scale * jnp.einsum("bhid,bhd->bhi", qc, n0)
+               + W.sum(-1))
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        h_out = num / den[..., None]
+
+        # outgoing state at t = c
+        b_end = bcum[..., -1:]
+        m_new = m_t[..., -1]
+        decay_c = jnp.exp(b_end + m0[..., None] - m_new[..., None])  # (b,h,1)
+        w_j = jnp.exp(b_end - bcum + ic - m_new[..., None])  # (b,h,c)
+        k_s = kc / math.sqrt(dh)
+        C_new = (C0 * decay_c[..., None] +
+                 jnp.einsum("bhj,bhjd,bhje->bhde", w_j, k_s, vc))
+        n_new = n0 * decay_c + jnp.einsum("bhj,bhjd->bhd", w_j, k_s)
+        return (C_new, n_new, m_new), h_out
+
+    init = (jnp.zeros((b, h, dh, dh), jnp.float32),
+            jnp.zeros((b, h, dh), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(body, init, (qs, ks, vs, igs, fgs))
+    out = jnp.moveaxis(hs, 0, 2).reshape(b, h, L + pad, dh)
+    return out[:, :, :L]
+
+
+def mlstm_apply(cfg, p: Params, x: jax.Array) -> jax.Array:
+    b, L, d = x.shape
+    h = cfg.n_heads
+    xi = rmsnorm(x, p["norm"])
+    xp = linear(xi, p["up_x"], use_kernels=cfg.use_kernels)
+    z = linear(xi, p["up_z"], use_kernels=cfg.use_kernels)
+    di = xp.shape[-1]
+    dh = di // h
+
+    def heads(t):
+        return t.reshape(b, L, h, dh).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    q = heads(linear(xp, p["wq"], use_kernels=cfg.use_kernels))
+    k = heads(linear(xp, p["wk"], use_kernels=cfg.use_kernels))
+    v = heads(linear(xp, p["wv"], use_kernels=cfg.use_kernels))
+    ig = (linear(xp, p["w_i"]).astype(jnp.float32) + p["b_i"]).transpose(0, 2, 1)
+    fg = (linear(xp, p["w_f"]).astype(jnp.float32) + p["b_f"]).transpose(0, 2, 1)
+
+    if L > MLSTM_CHUNK:
+        y = _mlstm_chunked(q, k, v, ig, fg)                  # O(L·C) memory
+    else:
+        y = _mlstm_parallel(q, k, v, ig, fg)                 # (b,h,L,dh)
+    y = y.transpose(0, 2, 1, 3).reshape(b, L, di).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"]) * jax.nn.silu(z)
+    return x + linear(y, p["down"], use_kernels=cfg.use_kernels)
+
+
+def mlstm_cache_init(cfg, batch: int) -> Params:
+    h = cfg.n_heads
+    dh = 2 * cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(cfg, p: Params, x: jax.Array, cache: Params):
+    """One token.  x (b, 1, d)."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    xi = rmsnorm(x, p["norm"])
+    xp = linear(xi, p["up_x"], use_kernels=cfg.use_kernels)
+    z = linear(xi, p["up_z"], use_kernels=cfg.use_kernels)
+    di = xp.shape[-1]
+    dh = di // h
+
+    def heads(t):
+        return t.reshape(b, h, dh).astype(jnp.float32)
+
+    q = heads(linear(xp, p["wq"], use_kernels=cfg.use_kernels))
+    k = heads(linear(xp, p["wk"], use_kernels=cfg.use_kernels))
+    v = heads(linear(xp, p["wv"], use_kernels=cfg.use_kernels))
+    ig = linear(xp, p["w_i"]).astype(jnp.float32).reshape(b, h) + p["b_i"]
+    fg = linear(xp, p["w_f"]).astype(jnp.float32).reshape(b, h) + p["b_f"]
+
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + cache["m"], ig)
+    i_act = jnp.exp(ig - m_new)
+    f_act = jnp.exp(logf + cache["m"] - m_new)
+    k_s = k / math.sqrt(dh)
+    C = cache["C"] * f_act[..., None, None] + i_act[..., None, None] * (
+        k_s[..., :, None] * v[..., None, :])
+    n = cache["n"] * f_act[..., None] + i_act[..., None] * k_s
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"]) * jax.nn.silu(z)
+    out = x + linear(y, p["down"], use_kernels=cfg.use_kernels)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg) -> Params:
+    """Per the xLSTM paper, the sLSTM recurrence is BLOCK-DIAGONAL over
+    heads: R is (h, dh, 4·dh), not (d, 4·d).  Besides being the faithful
+    form, it streams 4x fewer recurrent-weight bytes per timestep — the
+    dominant cost of the strictly-sequential scan (EXPERIMENTS.md §Perf
+    xlstm it.13)."""
+    d = cfg.d_model
+    h = max(cfg.n_heads, 1)
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": jnp.ones((d,), cfg.dtype),
+        "w_gates": dense_init(ks[0], d, 4 * d, cfg.dtype),   # z, i, f, o
+        "r_gates": (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+                    * 0.01).astype(cfg.dtype),
+        "b_gates": jnp.zeros((h, 4 * dh), jnp.float32),
+        "out_norm": jnp.ones((d,), cfg.dtype),
+        "down": dense_init(ks[2], d, d, cfg.dtype),
+    }
+
+
+def _slstm_step(p, state, gates_x):
+    """state (c, n, h, m) each (b, heads, dh) f32; gates_x (b, heads, 4dh)."""
+    c, n, hid, m = state
+    recur = jnp.einsum("bhd,hde->bhe", hid,
+                       p["r_gates"].astype(jnp.float32))
+    gates = gates_x + recur + p["b_gates"][None]
+    dh = c.shape[-1]
+    z_t = jnp.tanh(gates[..., :dh])
+    i_t = gates[..., dh:2 * dh]
+    f_t = gates[..., 2 * dh:3 * dh]
+    o_t = jax.nn.sigmoid(gates[..., 3 * dh:])
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    i_act = jnp.exp(i_t - m_new)
+    f_act = jnp.exp(logf + m - m_new)
+    c_new = f_act * c + i_act * z_t
+    n_new = jnp.maximum(f_act * n + i_act, jnp.exp(-m_new))
+    h_new = o_t * c_new / n_new
+    return (c_new, n_new, h_new, m_new)
+
+
+def _slstm_heads(cfg) -> tuple[int, int]:
+    h = max(cfg.n_heads, 1)
+    return h, cfg.d_model // h
+
+
+def slstm_apply(cfg, p: Params, x: jax.Array) -> jax.Array:
+    b, L, d = x.shape
+    h, dh = _slstm_heads(cfg)
+    xi = rmsnorm(x, p["norm"])
+    gates_x = linear(xi, p["w_gates"], use_kernels=cfg.use_kernels)
+    gates_x = gates_x.astype(jnp.float32).reshape(b, L, h, 4 * dh)
+
+    if cfg.use_kernels and not isinstance(
+            p["r_gates"], tuple) and hasattr(p["r_gates"], "shape"):
+        # Pallas path: recurrent weights resident in VMEM for the whole
+        # time loop (kernels/slstm_scan.py) — the 10^4x HBM-traffic fix
+        from repro.kernels.slstm_scan import slstm_scan_pallas
+        hs_blhd = slstm_scan_pallas(
+            gates_x, p["r_gates"].astype(jnp.float32),
+            p["b_gates"].astype(jnp.float32))
+        y = hs_blhd.reshape(b, L, d).astype(x.dtype)
+        y = rmsnorm(y, p["out_norm"])
+        return x + linear(y, p["down"], use_kernels=cfg.use_kernels)
+
+    def body(state, gx):
+        new = _slstm_step(p, state, gx)
+        return new, new[2]
+
+    init = tuple(jnp.zeros((b, h, dh), jnp.float32) for _ in range(3)) + (
+        jnp.full((b, h, dh), -1e30, jnp.float32),)
+    _, hs = jax.lax.scan(body, init, jnp.moveaxis(gates_x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, L, d).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"])
+    return x + linear(y, p["down"], use_kernels=cfg.use_kernels)
+
+
+def slstm_cache_init(cfg, batch: int) -> Params:
+    h, dh = _slstm_heads(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "h": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h, dh), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(cfg, p: Params, x: jax.Array, cache: Params):
+    b = x.shape[0]
+    h, dh = _slstm_heads(cfg)
+    xi = rmsnorm(x, p["norm"])
+    gates_x = linear(xi, p["w_gates"], use_kernels=cfg.use_kernels)
+    gx = gates_x.astype(jnp.float32)[:, 0].reshape(b, h, 4 * dh)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, hid, m = _slstm_step(p, state, gx)
+    y = hid.reshape(b, 1, -1).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"])
+    out = x + linear(y, p["down"], use_kernels=cfg.use_kernels)
+    return out, {"c": c, "n": n, "h": hid, "m": m}

@@ -1,0 +1,131 @@
+"""xLSTM model assembly (family "ssm"): mLSTM/sLSTM residual stack + LM head.
+
+xlstm-1.3b: 48 blocks; one sLSTM every ``slstm_every`` (paper's 7:1 recipe),
+the rest mLSTM.  Segments of (slstm_every-1) mLSTM blocks are scanned, each
+followed by one sLSTM block; scanning keeps the HLO compact for the
+dry-run.  No attention, no KV cache — the recurrent state is O(1) in context
+length, which is why this arch *runs* the long_500k cell (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, xlstm
+from repro.models.config import ModelConfig
+from repro.models.layers import Params
+from repro.models.transformer import stack_blocks
+
+
+def _segmentation(cfg: ModelConfig) -> tuple[int, int, int]:
+    if cfg.slstm_every <= 0:
+        return 0, 0, cfg.n_layers
+    n_seg = cfg.n_layers // cfg.slstm_every
+    m_per_seg = cfg.slstm_every - 1
+    tail = cfg.n_layers - n_seg * cfg.slstm_every
+    return n_seg, m_per_seg, tail
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, km, ks, kt, kh = jax.random.split(key, 5)
+    n_seg, m_per_seg, tail = _segmentation(cfg)
+    p: Params = {
+        "embed": layers.embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "ln_f": layers.norm_init(cfg),
+        "lm_head": layers.dense_init(kh, cfg.d_model, cfg.vocab_size, cfg.dtype),
+    }
+    if n_seg:
+        main = stack_blocks(km, cfg, n_seg * m_per_seg,
+                            lambda k, c: xlstm.mlstm_init(k, c))
+        p["mlstm_main"] = jax.tree.map(
+            lambda a: a.reshape(n_seg, m_per_seg, *a.shape[1:]), main)
+        p["slstm"] = stack_blocks(ks, cfg, n_seg,
+                                  lambda k, c: xlstm.slstm_init(k, c))
+    if tail:
+        p["mlstm_tail"] = stack_blocks(kt, cfg, tail,
+                                       lambda k, c: xlstm.mlstm_init(k, c))
+    return p
+
+
+def _mlstm_scan(cfg, stacked: Params, x: jax.Array) -> jax.Array:
+    def body(carry, bp):
+        return xlstm.mlstm_apply(cfg, bp, carry), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            positions=None, vision_embeds=None):
+    x = params["embed"][tokens]
+    n_seg, m_per_seg, tail = _segmentation(cfg)
+    if n_seg:
+        def seg_body(carry, inp):
+            m_seg, s_blk = inp
+            y = _mlstm_scan(cfg, m_seg, carry)
+            return xlstm.slstm_apply(cfg, s_blk, y), None
+
+        x, _ = jax.lax.scan(seg_body, x, (params["mlstm_main"], params["slstm"]))
+    if tail:
+        x = _mlstm_scan(cfg, params["mlstm_tail"], x)
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    return layers.linear(x, params["lm_head"],
+                         use_kernels=cfg.use_kernels), jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# serving — recurrent state instead of KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    n_seg, m_per_seg, tail = _segmentation(cfg)
+    mc = xlstm.mlstm_cache_init(cfg, batch)
+    sc = xlstm.slstm_cache_init(cfg, batch)
+    cache: Params = {}
+    if n_seg:
+        cache["mlstm_main"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None, None], (n_seg, m_per_seg) + a.shape), mc)
+        cache["slstm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_seg,) + a.shape), sc)
+    if tail:
+        cache["mlstm_tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (tail,) + a.shape), mc)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jax.Array, lengths):
+    x = params["embed"][tokens]
+    n_seg, m_per_seg, tail = _segmentation(cfg)
+    new_cache: Params = {}
+    if n_seg:
+        def seg_body(carry, inp):
+            m_seg, s_blk, m_c, s_c = inp
+
+            def mbody(c2, inp2):
+                bp, bc = inp2
+                y, nc = xlstm.mlstm_decode(cfg, bp, c2, bc)
+                return y, nc
+
+            y, new_mc = jax.lax.scan(mbody, carry, (m_seg, m_c))
+            y, new_sc = xlstm.slstm_decode(cfg, s_blk, y, s_c)
+            return y, (new_mc, new_sc)
+
+        x, (nm, ns) = jax.lax.scan(
+            seg_body, x,
+            (params["mlstm_main"], params["slstm"],
+             cache["mlstm_main"], cache["slstm"]))
+        new_cache["mlstm_main"], new_cache["slstm"] = nm, ns
+    if tail:
+        def mbody(c2, inp2):
+            bp, bc = inp2
+            return xlstm.mlstm_decode(cfg, bp, c2, bc)
+
+        x, nt = jax.lax.scan(mbody, x, (params["mlstm_tail"], cache["mlstm_tail"]))
+        new_cache["mlstm_tail"] = nt
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.linear(x, params["lm_head"], use_kernels=cfg.use_kernels)[:, 0]
+    return logits, new_cache

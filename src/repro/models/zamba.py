@@ -1,0 +1,167 @@
+"""Zamba2-style hybrid backbone: Mamba2 layers + shared attention blocks.
+
+[arXiv:2411.15242]  81 Mamba2 layers; after every ``shared_attn_every`` (6)
+of them one of ``n_shared_blocks`` (2) *weight-shared* transformer blocks
+(attention + SwiGLU MLP) runs, alternating.  The shared blocks' weights are
+stored once — each invocation site only owns its KV cache.
+
+Execution shape: the 81-layer stack is split into ``n_seg`` segments of 6
+(scanned) + a tail; segments run under an outer ``lax.scan`` whose per-step
+shared-block parameters are index-selected (i mod 2) from the stacked shared
+weights.  This keeps the HLO compact for the 512-device dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import Params
+from repro.models.transformer import stack_blocks, unembed
+
+
+def shared_block_init(key, cfg) -> Params:
+    ka, kf = jax.random.split(key)
+    return {
+        "ln_attn": layers.norm_init(cfg),
+        "attn": attention.attn_init(ka, cfg),
+        "ln_mlp": layers.norm_init(cfg),
+        "mlp": layers.mlp_init(kf, cfg),
+    }
+
+
+def mamba_block_init(key, cfg) -> Params:
+    return {"ln": layers.norm_init(cfg), "mamba": ssm.mamba_init(key, cfg)}
+
+
+def _segmentation(cfg: ModelConfig) -> tuple[int, int, int]:
+    seg = cfg.shared_attn_every
+    n_seg = cfg.n_layers // seg
+    tail = cfg.n_layers - n_seg * seg
+    return seg, n_seg, tail
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, km, ks, kh = jax.random.split(key, 4)
+    seg, n_seg, tail = _segmentation(cfg)
+    main = stack_blocks(km, cfg, n_seg * seg, mamba_block_init)
+    main = jax.tree.map(
+        lambda a: a.reshape(n_seg, seg, *a.shape[1:]), main)
+    p: Params = {
+        "embed": layers.embed_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "mamba_main": main,
+        "shared": stack_blocks(ks, cfg, cfg.n_shared_blocks, shared_block_init),
+        "ln_f": layers.norm_init(cfg),
+        "lm_head": layers.dense_init(kh, cfg.d_model, cfg.vocab_size, cfg.dtype),
+    }
+    if tail:
+        p["mamba_tail"] = stack_blocks(
+            jax.random.fold_in(km, 1), cfg, tail, mamba_block_init)
+    return p
+
+
+def _mamba_scan(cfg, stacked: Params, x: jax.Array) -> jax.Array:
+    def body(carry, bp):
+        h = ssm.mamba_apply(cfg, bp["mamba"],
+                            layers.apply_norm(cfg, bp["ln"], carry))
+        return carry + h, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def _shared_apply(cfg, sp: Params, x: jax.Array, positions) -> jax.Array:
+    h = attention.attn_apply(
+        cfg, sp["attn"], layers.apply_norm(cfg, sp["ln_attn"], x), positions)
+    x = x + h
+    return x + layers.mlp_apply(
+        cfg, sp["mlp"], layers.apply_norm(cfg, sp["ln_mlp"], x))
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            positions=None, vision_embeds=None):
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if positions is None:
+        positions = layers.positions_for(cfg, b, s)
+    seg, n_seg, tail = _segmentation(cfg)
+    seg_ids = jnp.arange(n_seg) % cfg.n_shared_blocks
+
+    def seg_body(carry, inp):
+        mamba_seg, sid = inp
+        y = _mamba_scan(cfg, mamba_seg, carry)
+        sp = jax.tree.map(lambda a: a[sid], params["shared"])
+        return _shared_apply(cfg, sp, y, positions), None
+
+    x, _ = jax.lax.scan(seg_body, x, (params["mamba_main"], seg_ids))
+    if tail:
+        x = _mamba_scan(cfg, params["mamba_tail"], x)
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    return layers.linear(x, params["lm_head"],
+                         use_kernels=cfg.use_kernels), jnp.float32(0)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    seg, n_seg, tail = _segmentation(cfg)
+    mcache = ssm.mamba_cache_init(cfg, batch)
+    kv = attention.init_kv_cache(cfg, batch, max_len)
+    return {
+        "mamba_main": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None, None], (n_seg, seg) + a.shape), mcache),
+        "mamba_tail": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (tail,) + a.shape), mcache)
+        if tail else None,
+        "kv": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_seg,) + a.shape), kv),
+    }
+
+
+def _mamba_decode_scan(cfg, stacked: Params, x: jax.Array, caches: Params):
+    def body(carry, inp):
+        bp, c = inp
+        h, new_c = ssm.mamba_decode(
+            cfg, bp["mamba"], layers.apply_norm(cfg, bp["ln"], carry), c)
+        return carry + h, new_c
+
+    return jax.lax.scan(body, x, (stacked, caches))
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jax.Array, lengths):
+    b = tokens.shape[0]
+    lengths = jnp.asarray(lengths)
+    x = params["embed"][tokens]
+    pos = (lengths - 1).reshape(-1, 1) * jnp.ones((b, 1), jnp.int32)
+    seg, n_seg, tail = _segmentation(cfg)
+    seg_ids = jnp.arange(n_seg) % cfg.n_shared_blocks
+
+    def seg_body(carry, inp):
+        mamba_seg, mamba_c, kv_c, sid = inp
+        y, new_mc = _mamba_decode_scan(cfg, mamba_seg, carry, mamba_c)
+        sp = jax.tree.map(lambda a: a[sid], params["shared"])
+        h, new_kv = attention.attn_decode(
+            cfg, sp["attn"], layers.apply_norm(cfg, sp["ln_attn"], y),
+            pos, kv_c, lengths)
+        y = y + h
+        y = y + layers.mlp_apply(
+            cfg, sp["mlp"], layers.apply_norm(cfg, sp["ln_mlp"], y))
+        return y, (new_mc, new_kv)
+
+    x, (new_main, new_kv) = jax.lax.scan(
+        seg_body, x,
+        (params["mamba_main"], cache["mamba_main"], cache["kv"], seg_ids))
+    new_tail = cache.get("mamba_tail")
+    if tail:
+        x, new_tail = _mamba_decode_scan(
+            cfg, params["mamba_tail"], x, cache["mamba_tail"])
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.linear(x, params["lm_head"], use_kernels=cfg.use_kernels)[:, 0]
+    return logits, {"mamba_main": new_main, "mamba_tail": new_tail, "kv": new_kv}

@@ -1,0 +1,175 @@
+"""shard_map flash-decoding: one-token attention over a sequence-sharded KV
+cache (EXPERIMENTS.md §Perf qwen3-decode iterations).
+
+Under plain pjit, the decode step's cache update + attention trigger
+"involuntary full rematerialization" resharding copies between the
+seq-sharded cache and the head-sharded attention compute — measured ~200×
+the int4-floor memory traffic on qwen3-8b decode_32k.  This module makes
+the intended dataflow explicit:
+
+* the cache NEVER moves: each model shard holds a contiguous sequence slice;
+* the new token's K/V is written by whichever shard owns slot
+  ``(length-1) mod cache_len`` (a ``lax.cond`` guarded local update);
+* each shard computes partial attention over its slice with a local max /
+  sum, then the shards merge with the flash-decoding log-sum-exp rule
+  (one pmax + two psums of (b, h, d)-sized partials — KBs, not GBs);
+* q is replicated across the sequence axes (it is one token).
+
+Numerically identical to ``ref.decode_attention_ref`` (tested).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+_NEG = -1e30
+
+
+def seq_axes_for(mesh: Mesh, batch: int) -> tuple[str, ...]:
+    """Mirror kv_cache_specs: seq shards over 'model', plus the data axes
+    when the batch can't occupy them (batch == 1 / indivisible)."""
+    da = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+    if batch > 1 and batch % dsize == 0:
+        return ("model",)
+    return da + ("model",)
+
+
+def decode_attention_sharded(
+    q: jax.Array,            # (b, hq, 1, hd)
+    k_new: jax.Array,        # (b, hkv, 1, hd)
+    v_new: jax.Array,
+    k_cache: jax.Array,      # (b, hkv, S, hd) — seq sharded
+    v_cache: jax.Array,
+    lengths: jax.Array,      # scalar: context length incl. new token
+    mesh: Mesh,
+    *,
+    rolling: bool,
+    scale: float | None = None,
+    scales: tuple | None = None,   # (k_scale, v_scale) for int8-quantized KV
+):
+    """Returns (out (b, hq, 1, hd), new_cache dict)."""
+    b, hq, _, hd = q.shape
+    hkv, S = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    scale_v = scale if scale is not None else float(1.0 / (hd ** 0.5))
+    sa = seq_axes_for(mesh, b)
+    da = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_ax = da if (b > 1 and sa == ("model",)) else None
+    quant = scales is not None
+
+    def local(q_l, kn, vn, ck, cv, ksc, vsc, length):
+        s_loc = ck.shape[2]
+        shard = sum(jax.lax.axis_index(a) * int(np.prod(
+            [mesh.shape[x] for x in sa[i + 1:]]))
+            for i, a in enumerate(sa))
+        off = shard * s_loc
+        write_idx = ((length - 1) % S) if rolling else (length - 1)
+        local_idx = write_idx - off
+        in_range = (local_idx >= 0) & (local_idx < s_loc)
+
+        def upd(c, new):
+            safe = jnp.clip(local_idx, 0, s_loc - 1)
+            updated = jax.lax.dynamic_update_slice(
+                c, new.astype(c.dtype), (0, 0, safe, 0))
+            return jax.lax.cond(in_range, lambda: updated, lambda: c)
+
+        if quant:
+            from repro.models.attention import quantize_kv
+            knq, kns = quantize_kv(kn)
+            vnq, vns = quantize_kv(vn)
+            ck2, cv2 = upd(ck, knq), upd(cv, vnq)
+            ksc2, vsc2 = upd(ksc, kns), upd(vsc, vns)
+        else:
+            ck2, cv2 = upd(ck, kn), upd(cv, vn)
+            ksc2 = vsc2 = None
+
+        # partial attention over the local slice.  Two traffic rules
+        # (measured on qwen3 decode, §Perf): (1) keep the cache in its
+        # storage dtype — an explicit .astype(f32) materializes a full f32
+        # cache copy per layer; preferred_element_type converts in-flight;
+        # (2) GQA via grouped einsum, NOT jnp.repeat — repeating K/V to 32
+        # heads materializes rep x the cache bytes.
+        bl = q_l.shape[0]                                    # local batch
+        if quant:
+            # int8 KV: scale-after-dot (the paper's Stage-3 trick applied
+            # to the dynamic operand): logits_s = (q·k_q_s)·kscale_s
+            kmat = ck2.astype(q_l.dtype)
+            q5 = q_l.reshape(bl, hkv, rep, 1, hd)
+            logits = jnp.einsum("bgrqd,bgkd->bgrqk", q5, kmat,
+                                preferred_element_type=jnp.float32)
+            logits = logits * ksc2[:, :, None, None, :, 0] * scale_v
+        else:
+            q5 = q_l.reshape(bl, hkv, rep, 1, hd).astype(ck2.dtype)
+            logits = jnp.einsum("bgrqd,bgkd->bgrqk", q5, ck2,
+                                preferred_element_type=jnp.float32) * scale_v
+        pos = off + jnp.arange(s_loc)
+        valid_len = jnp.minimum(length, S) if rolling else length
+        valid = pos < valid_len
+        logits = jnp.where(valid[None, None, None, None, :], logits, _NEG)
+
+        m_loc = jnp.max(logits, axis=-1)                     # (b,g,r,1)
+        p = jnp.exp(logits - m_loc[..., None])
+        p = jnp.where(valid[None, None, None, None, :], p, 0.0)
+        l_loc = p.sum(axis=-1)
+        if quant:
+            # fold vscale into the probabilities (linear in v)
+            pv = (p * vsc2[:, :, None, None, :, 0]).astype(q_l.dtype)
+            acc = jnp.einsum("bgrqk,bgkd->bgrqd", pv, cv2.astype(q_l.dtype),
+                             preferred_element_type=jnp.float32)
+        else:
+            acc = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(cv2.dtype), cv2,
+                             preferred_element_type=jnp.float32)
+
+        # flash-decoding merge across sequence shards
+        m_g = jax.lax.pmax(m_loc, sa)
+        corr = jnp.exp(m_loc - m_g)
+        l_g = jax.lax.psum(l_loc * corr, sa)
+        acc_g = jax.lax.psum(acc * corr[..., None], sa)
+        out = (acc_g / jnp.maximum(l_g, 1e-30)[..., None])
+        out = out.reshape(bl, hq, 1, hd).astype(q_l.dtype)
+        if quant:
+            return out, ck2, cv2, ksc2, vsc2
+        return out, ck2, cv2
+
+    cache_spec = P(batch_ax, None, sa if len(sa) > 1 else sa[0], None)
+    rep_spec = P(batch_ax, None, None, None)
+    if quant:
+        ksc, vsc = scales
+        fn = jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(rep_spec, rep_spec, rep_spec, cache_spec, cache_spec,
+                      cache_spec, cache_spec, P()),
+            out_specs=(rep_spec, cache_spec, cache_spec, cache_spec,
+                       cache_spec),
+        )
+        out, k2, v2, ks2, vs2 = fn(q, k_new, v_new, k_cache, v_cache,
+                                   ksc, vsc, lengths)
+        return out, {"k": k2, "v": v2, "k_scale": ks2, "v_scale": vs2}
+
+    def local_noq(q_l, kn, vn, ck, cv, length):
+        return local(q_l, kn, vn, ck, cv, None, None, length)
+
+    fn = jax.shard_map(
+        local_noq, mesh=mesh,
+        in_specs=(rep_spec, rep_spec, rep_spec, cache_spec, cache_spec, P()),
+        out_specs=(rep_spec, cache_spec, cache_spec),
+    )
+    out, k2, v2 = fn(q, k_new, v_new, k_cache, v_cache, lengths)
+    return out, {"k": k2, "v": v2}
+
+
+def usable(mesh: Mesh | None, batch: int, hq: int, hkv: int, S: int,
+           lengths) -> bool:
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    if jnp.asarray(lengths).ndim != 0:
+        return False
+    sa = seq_axes_for(mesh, batch)
+    n = int(np.prod([mesh.shape[a] for a in sa]))
+    return S % n == 0 and S >= n

@@ -1,0 +1,75 @@
+"""Activation sharding hints.
+
+Model code calls ``hint(x, "batch", "heads", None, None)`` at layout-critical
+points (attention operands, logits, SSD tensors).  When a mesh is active
+(set by the launch layer via :func:`use_mesh`), logical names resolve to mesh
+axes and a ``with_sharding_constraint`` is emitted; otherwise the call is a
+no-op, so single-device tests never see mesh machinery.
+
+Why this exists: XLA's sharding propagation gives up at a few model points —
+notably the GQA ``jnp.repeat`` of K/V heads, after which the whole attention
+computation silently replicates across the ``model`` axis (measured: 16×
+excess attention FLOPs on mixtral train before these hints — EXPERIMENTS.md
+§Perf iteration 1).
+
+Logical names:
+    batch  -> ("pod", "data")      heads  -> "model"
+    ffn    -> "model"              seq_mp -> "model" (decode KV seq)
+    none / None -> unsharded
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+_ACTIVE_MESH: contextvars.ContextVar[Mesh | None] = contextvars.ContextVar(
+    "repro_active_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE_MESH.get()
+
+
+def _resolve(name: str | None, mesh: Mesh):
+    if name is None or name == "none":
+        return None
+    if name == "batch":
+        return tuple(a for a in ("pod", "data") if a in mesh.axis_names) or None
+    if name in ("heads", "ffn", "seq_mp"):
+        return "model" if "model" in mesh.axis_names else None
+    if name in mesh.axis_names:
+        return name
+    return None
+
+
+def hint(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Constrain x's sharding if a mesh is active; no-op otherwise."""
+    mesh = active_mesh()
+    if mesh is None or not hasattr(x, "shape") or len(logical) != x.ndim:
+        return x
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        axes = _resolve(name, mesh)
+        if axes is None:
+            spec.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        size = int(np.prod([mesh.shape[a] for a in ax_tuple]))
+        spec.append(axes if dim % size == 0 and dim >= size else None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

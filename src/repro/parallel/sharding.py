@@ -1,0 +1,216 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs per mode.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  The ``pod`` axis always composes with ``data`` (batch /
+FSDP dimension) — gradients reduce hierarchically (reduce-scatter in-pod,
+all-reduce across pods, both emitted by XLA from the same spec).
+
+Two rule sets:
+
+* TRAIN — Megatron TP over ``model`` (column-parallel in-projections,
+  row-parallel out-projections) × FSDP/ZeRO over ``data`` (every matrix's
+  other dimension).  Optimizer state inherits these specs = ZeRO-3.
+* SERVE — TP over ``model`` only; weights replicated across ``data`` (each
+  data shard decodes its own batch rows; no FSDP gathers on the decode
+  critical path).  KV caches shard batch over ``data`` and sequence over
+  ``model`` (decode attention partial-softmax reductions become ``model``
+  collectives — flash-decoding, SPMD-style).  When batch == 1 (long_500k)
+  the cache sequence axis shards over BOTH axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# parameter-name classification --------------------------------------------
+
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "gate", "up", "up_x", "up_z", "w_gates", "in_proj",
+    "lm_head", "w_i", "w_f",
+}
+_ROW_PARALLEL = {"wo", "down", "out_proj", "r_gates"}
+_EMBED = {"embed"}
+_REPLICATED = {
+    "gamma", "beta", "norm", "out_norm", "ln", "A_log", "D", "dt_bias",
+    "b_gates", "b_i", "b_f", "conv_b", "bq", "bk", "bv", "up_bias",
+    "down_bias", "router", "scales", "block_idx",
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for entry in path:
+        if isinstance(entry, jax.tree_util.DictKey):
+            out.append(str(entry.key))
+        elif isinstance(entry, jax.tree_util.GetAttrKey):
+            out.append(str(entry.name))
+    return out
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _spec_for(name: str, names: list[str], ndim: int, shape,
+              mesh: Mesh, mode: str) -> P:
+    """Spec over the TRAILING 2 dims; leading dims (layer stack, expert,
+    segment) stay unsharded unless noted."""
+    da = data_axes(mesh)
+    fsdp = da if mode == "train" else None
+    is_packed = name == "packed"                     # quantized weight bytes
+
+    if name in _REPLICATED and not is_packed:
+        return P()
+    if "slstm" in names:
+        # sLSTM is strictly sequential: sharding its (small) weights over
+        # 'model' puts an all-reduce inside every timestep of the scan —
+        # measured 7.6M collective ops on xlstm train (§Perf it.6).
+        # Replicate the whole block; the recurrence stays device-local.
+        return P()
+    if "moe" in names and name in ("gate", "up", "down") and not is_packed:
+        # expert weights: hidden axis sharded over (data…, model) jointly —
+        # must match the shard_map in_specs in models/moe.py exactly, or
+        # every scan step reshards the whole expert stack
+        wstack = (da + ("model",)) if mode == "train" else ("model",)
+        wstack = wstack if len(wstack) > 1 else wstack[0]
+        if name == "down":
+            return P(*([None] * (ndim - 2)), wstack, None)
+        return P(*([None] * (ndim - 1)), wstack)
+    if name in _EMBED:
+        # vocab over model; replicate d (lookups gather rows)
+        return P(*([None] * (ndim - 2)), "model", None)
+    if name == "conv_w":
+        return P(*([None] * (ndim - 1)), "model")
+    if name in _COL_PARALLEL or (is_packed and _col_quant(names)):
+        return P(*([None] * (ndim - 2)), fsdp, "model")
+    if name in _ROW_PARALLEL or (is_packed and not _col_quant(names)):
+        return P(*([None] * (ndim - 2)), "model", fsdp)
+    # default: replicate
+    return P()
+
+
+def _col_quant(names: list[str]) -> bool:
+    """Is a QuantizedTensor leaf (``.../<wname>/packed``) column-parallel?"""
+    for n in reversed(names[:-1]):
+        if n in _COL_PARALLEL:
+            return True
+        if n in _ROW_PARALLEL:
+            return False
+    return True
+
+
+def _quant_scale_spec(names: list[str], ndim: int, mesh: Mesh, mode: str) -> P:
+    # col-parallel: scales (..., groups, out) shard the out dim;
+    # row-parallel: shard the groups dim (follows the contraction TP split)
+    if _col_quant(names):
+        return P(*([None] * (ndim - 1)), "model")
+    return P(*([None] * (ndim - 2)), "model", None)
+
+
+def param_specs(params_shape: Any, mesh: Mesh, mode: str = "train") -> Any:
+    """Map a params shape-pytree to PartitionSpecs."""
+
+    def f(path, leaf):
+        names = _path_names(path)
+        name = _leaf_name(path)
+        ndim = len(leaf.shape)
+        if ndim == 0:
+            return P()
+        if name == "scales":
+            return _quant_scale_spec(names, ndim, mesh, mode)
+        if name in ("block_idx",):
+            return P()
+        spec = _spec_for(name, names, ndim, leaf.shape, mesh, mode)
+        return _legalize(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def _legalize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on axes that don't divide evenly; strip trailing Nones."""
+    out = []
+    for dim, s in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if s is None:
+            out.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(s if dim % size == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shardings_for(tree_shape: Any, mesh: Mesh, mode: str = "train") -> Any:
+    specs = param_specs(tree_shape, mesh, mode)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# -- activations / batches / caches -----------------------------------------
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh))
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh) -> Any:
+    da = data_axes(mesh)
+
+    def f(leaf):
+        spec = _legalize(P(da), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(f, batch_shape)
+
+
+def kv_cache_specs(cache_shape: Any, mesh: Mesh, batch: int) -> Any:
+    """KV/state caches: batch over data, sequence over model (flash-decoding
+    partials); batch==1 shards sequence over every axis."""
+    da = data_axes(mesh)
+    data_size = int(np.prod([mesh.shape[a] for a in da]))
+
+    def f(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        # find the batch dim: first dim equal to `batch` after leading stack dims
+        spec: list = [None] * len(shape)
+        bdim = None
+        for i, d in enumerate(shape):
+            if d == batch:
+                bdim = i
+                break
+        if batch > 1 and bdim is not None and batch % data_size == 0:
+            spec[bdim] = da
+        if name in ("k", "v", "k_scale", "v_scale") and len(shape) >= 2:
+            # sequence dim is -2 in (..., B, hkv, max_len, hd|1)
+            seq_dim = len(shape) - 2
+            if bdim != seq_dim:
+                if batch == 1 or bdim is None:
+                    spec[seq_dim] = da + ("model",)
+                else:
+                    spec[seq_dim] = "model"
+        elif name in ("state",):
+            # mamba state (..., B, H, N, P): heads over model
+            hdim = (bdim + 1) if bdim is not None else len(shape) - 3
+            spec[hdim] = "model"
+        elif name in ("conv",):
+            spec[-1] = "model"
+        elif name in ("C", "n"):
+            hdim = (bdim + 1) if bdim is not None else 1
+            spec[hdim] = "model"
+        return NamedSharding(mesh, _legalize(P(*spec), shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(f, cache_shape)

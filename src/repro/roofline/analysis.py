@@ -1,0 +1,165 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs          / (peak_FLOP/s per chip)
+    memory     = HLO_bytes          / (HBM_bw per chip)
+    collective = collective_bytes   / (link_bw per chip)
+
+``cost_analysis()`` of the partitioned executable reports **per-device**
+FLOPs/bytes, so no further division by chip count is needed.  Collective
+bytes are not in cost_analysis — they are parsed from the optimized HLO
+(every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op), with ring-model wire factors applied per op kind.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment-given).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# -- hardware constants (TPU v5e) -------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, per direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# ring-model wire traffic per device, as a multiple of the op's payload
+# bytes (N = ring size; for N=16: (N-1)/N ≈ 0.94, 2(N-1)/N ≈ 1.9)
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,          # payload = full output, each dev sends 1/N·out×(N-1)
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Sum byte sizes of every dtype[shape] occurrence in a type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict[str, Any]:
+    """Parse optimized HLO; per collective kind: op count + payload bytes +
+    ring-model wire bytes (per device)."""
+    stats = {k: {"count": 0, "payload_bytes": 0, "wire_bytes": 0.0}
+             for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        lhs, rhs = line.split(" = ", 1)
+        m = re.match(r"((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+([a-z0-9-]+)",
+                     rhs)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        payload = _type_bytes(type_str)
+        stats[base]["count"] += 1
+        stats[base]["payload_bytes"] += payload
+        stats[base]["wire_bytes"] += payload * _WIRE_FACTOR[base]
+    stats["total_payload_bytes"] = sum(
+        v["payload_bytes"] for k, v in stats.items() if k in _COLLECTIVES)
+    stats["total_wire_bytes"] = sum(
+        v["wire_bytes"] for k, v in stats.items() if k in _COLLECTIVES)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device
+    hbm_bytes: float             # per device
+    collective_bytes: float      # per device (wire model)
+    steps_per_call: int = 1      # grad-accum microbatches etc.
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+        }
+
+
+def model_flops(cfg, cell, n_devices: int) -> dict[str, float]:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for training;
+    2·N·D for inference forward (per step: D = tokens processed)."""
+    n_active = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        total = 6.0 * n_active * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = cell.global_batch
+        total = 2.0 * n_active * tokens
+    return {
+        "model_flops_total": total,
+        "model_flops_per_dev": total / n_devices,
+        "active_params": float(n_active),
+        "params": float(cfg.param_count()),
+    }

@@ -1,0 +1,410 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (verified on this backend), which silently zeroes out scan-over-layers
+models.  This module re-derives FLOPs / HBM bytes / collective bytes from the
+optimized HLO text with loop multipliers:
+
+* while ops carry ``backend_config={"known_trip_count":{"n":"L"}}`` — the
+  body's cost is multiplied by L (nested loops compose);
+* ``fusion`` call sites contribute operand+output bytes (the fusion boundary
+  is the HBM boundary) and the fused computation is recursed for FLOPs only;
+* ``call``/``conditional`` recurse fully;
+* collective ops (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute) accumulate payload + ring-model wire bytes by kind;
+  ``-start``/``-done`` pairs are counted once;
+* dot FLOPs = 2 · prod(out) · prod(contracting dims); elementwise /
+  reduce / rng ops contribute ~1 FLOP per output element, reported
+  separately (``ew_flops``) since they bind to the VPU, not the MXU.
+
+The result is the per-device cost of one step of the *partitioned* program —
+exactly the quantity the three-term roofline needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SKIP_MEM = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "while", "call", "conditional", "custom-call",
+}
+_EW_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "logistic", "log", "log-plus-one", "rsqrt",
+    "sqrt", "negate", "abs", "compare", "select", "and", "or", "xor", "not",
+    "exponential-minus-one", "cosine", "sine", "floor", "ceil", "round",
+    "clamp", "remainder", "sign", "atan2", "reduce", "reduce-window", "map",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z0-9\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*([0-9]+)')
+_ATTR_COMP_RE = re.compile(r"(?:body|to_apply|calls)=(%?[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%?[\w.\-]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+def _parse_computations(text: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    cur: list[Op] | None = None
+    cur_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _HDR_RE.match(line.strip())
+            if m:
+                cur_name = m.group(2).lstrip("%")
+                cur = []
+            continue
+        if line.strip() == "}":
+            comps[cur_name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, opcode = m.groups()
+            cur.append(Op(name.lstrip("%"), type_str, opcode, line))
+        elif "(" in line and line.strip().startswith("%") and "= " not in line:
+            # parameter declarations inside header already consumed; ignore
+            pass
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    dot_flops: float = 0.0
+    ew_flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll: dict[str, dict[str, float]] = dataclasses.field(
+        default_factory=lambda: {k: {"count": 0.0, "payload_bytes": 0.0,
+                                     "wire_bytes": 0.0} for k in _COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.dot_flops += other.dot_flops * mult
+        self.ew_flops += other.ew_flops * mult
+        self.mem_bytes += other.mem_bytes * mult
+        for k in _COLLECTIVES:
+            for f in ("count", "payload_bytes", "wire_bytes"):
+                self.coll[k][f] += other.coll[k][f] * mult
+
+    def as_dict(self) -> dict[str, Any]:
+        out = {
+            "dot_flops": self.dot_flops,
+            "ew_flops": self.ew_flops,
+            "flops": self.dot_flops + self.ew_flops,
+            "mem_bytes": self.mem_bytes,
+            "collectives": self.coll,
+            "collective_payload_bytes": sum(
+                v["payload_bytes"] for v in self.coll.values()),
+            "collective_wire_bytes": sum(
+                v["wire_bytes"] for v in self.coll.values()),
+        }
+        return out
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = _parse_computations(text)
+        # symbol tables: computation -> {op_name: type_str}
+        self.symbols = {
+            cname: {op.name: op.type_str for op in ops}
+            for cname, ops in self.comps.items()
+        }
+        self.ops_by_name = {
+            cname: {op.name: op for op in ops}
+            for cname, ops in self.comps.items()
+        }
+        # parameters appear as ops with opcode 'parameter'
+        self._memo: dict[str, Cost] = {}
+        self.entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _HDR_RE.match(line.strip())
+                if m:
+                    self.entry = m.group(2).lstrip("%")
+        if self.entry is None:
+            # fall back: the last computation
+            self.entry = list(self.comps)[-1] if self.comps else None
+
+    # -- CPU-backend bf16 legalization correction ----------------------------
+
+    def _operand_names(self, op: Op) -> list[str]:
+        # locate "<opcode>(" AFTER the "=" (the op name may contain the
+        # opcode as a substring, e.g. "%dot = f32[...] dot(...)")
+        eq = op.line.find(" = ")
+        m = re.search(re.escape(op.opcode) + r"\(([^)]*)\)", op.line[eq + 3:])
+        if not m:
+            return []
+        return [o.strip().lstrip("%") for o in m.group(1).split(",") if o.strip()]
+
+    def _derived_from_bf16(self, cname: str, name: str, depth: int = 5) -> bool:
+        """Does this value's producer chain round-trip through bf16?
+
+        The CPU backend's float-normalization pass upcasts bf16 dots to f32
+        BEFORE collectives are placed, so the partitioned HLO shows f32
+        all-reduces that would be bf16 on TPU (verified on a trivial
+        row-parallel matmul).  We walk the producer chain through
+        convert / dot / fusion-root / elementwise ops looking for a
+        convert-from-bf16, and count such collectives at 2 bytes/element.
+        """
+        if depth <= 0:
+            return False
+        op = self.ops_by_name.get(cname, {}).get(name)
+        if op is None:
+            return False
+        if "bf16[" in op.type_str:
+            return True
+        if op.opcode == "convert":
+            src = self._operand_names(op)
+            if src:
+                t = self.symbols.get(cname, {}).get(src[0], "")
+                if "bf16[" in t:
+                    return True
+                return self._derived_from_bf16(cname, src[0], depth - 1)
+        if op.opcode == "fusion":
+            sub = _ATTR_COMP_RE.search(op.line)
+            if sub:
+                sub_name = sub.group(1).lstrip("%")
+                ops = self.comps.get(sub_name, [])
+                for o in ops:
+                    if "ROOT" in o.line:
+                        return self._derived_from_bf16(sub_name, o.name, depth - 1)
+        if op.opcode in ("dot", "add", "multiply", "subtract", "select",
+                         "maximum", "get-tuple-element", "copy", "transpose",
+                         "reshape", "bitcast", "dynamic-slice", "broadcast"):
+            for src in self._operand_names(op):
+                t = self.symbols.get(cname, {}).get(src, "")
+                if "bf16[" in t:
+                    return True
+                if self._derived_from_bf16(cname, src, depth - 1):
+                    return True
+        return False
+
+    def _fusion_root_opcode(self, sub_name: str | None) -> str | None:
+        if not sub_name:
+            return None
+        root = None
+        has_dus = has_ds = False
+        for o in self.comps.get(sub_name, []):
+            if o.opcode == "dynamic-update-slice":
+                has_dus = True
+            if o.opcode in ("dynamic-slice", "slice"):
+                has_ds = True
+            if "ROOT" in o.line:
+                root = o.opcode
+        wrappers = ("dynamic-update-slice", "dynamic-slice", "slice",
+                    "convert", "copy", "bitcast", "reshape", "broadcast")
+        # convert/copy-wrapped in-place updates count as the update itself
+        if has_dus and root in wrappers:
+            return "dynamic-update-slice"
+        # slice-reading fusions touch the sliced region, not the whole
+        # operand (a scan reading one layer's KV from the stacked cache)
+        if has_ds and root in wrappers:
+            return "dynamic-slice"
+        return root
+
+    def _coll_payload(self, op: Op, cname: str) -> float:
+        """Collective payload bytes with effective-dtype correction."""
+        elems, bytes_ = _shape_elems_bytes(op.type_str)
+        if "f32[" in op.type_str:
+            for src in self._operand_names(op):
+                if self._derived_from_bf16(cname, src):
+                    return bytes_ / 2.0
+        return float(bytes_)
+
+    # -- per-op costs --------------------------------------------------------
+
+    def _dot_flops(self, op: Op, cname: str) -> float:
+        out_elems, _ = _shape_elems_bytes(op.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        dims = [int(d) for d in m.group(1).split(",")] if m and m.group(1) else []
+        # lhs operand type
+        operands = self._operand_names(op)
+        lhs_type = self.symbols.get(cname, {}).get(operands[0]) if operands else None
+        contract = 1
+        if lhs_type and dims:
+            shapes = _SHAPE_RE.findall(lhs_type)
+            if shapes:
+                dim_list = ([int(d) for d in shapes[0][1].split(",")]
+                            if shapes[0][1] else [])
+                for d in dims:
+                    if d < len(dim_list):
+                        contract *= dim_list[d]
+        return 2.0 * out_elems * max(contract, 1)
+
+    def _operand_bytes(self, op: Op, cname: str) -> float:
+        total = 0.0
+        table = self.symbols.get(cname, {})
+        for nm in self._operand_names(op):
+            t = table.get(nm)
+            if not t:
+                continue
+            b = _shape_elems_bytes(t)[1]
+            if "f32[" in t and self._derived_from_bf16(cname, nm, depth=3):
+                b /= 2.0  # CPU bf16->f32 legalization; bf16 on TPU
+            total += b
+        return total
+
+    def _output_bytes(self, op: Op, cname: str) -> float:
+        _, b = _shape_elems_bytes(op.type_str)
+        if "f32[" in op.type_str and self._derived_from_bf16(
+                cname, op.name, depth=3):
+            return b / 2.0
+        return float(b)
+
+    # -- computation cost ----------------------------------------------------
+
+    def comp_cost(self, cname: str, flops_only: bool = False) -> Cost:
+        key = f"{cname}|{flops_only}"
+        if key in self._memo:
+            return self._memo[key]
+        cost = Cost()
+        for op in self.comps.get(cname, []):
+            oc = op.opcode
+            base = oc
+            for suf in ("-start", "-done"):
+                if base.endswith(suf):
+                    base = base[: -len(suf)]
+            if base in _COLLECTIVES:
+                if oc.endswith("-done"):
+                    continue
+                payload = self._coll_payload(op, cname)
+                cost.coll[base]["count"] += 1
+                cost.coll[base]["payload_bytes"] += payload
+                cost.coll[base]["wire_bytes"] += payload * _WIRE_FACTOR[base]
+                continue
+            if oc == "while":
+                m = _TRIP_RE.search(op.line)
+                trips = float(m.group(1)) if m else 1.0
+                body = _ATTR_COMP_RE.search(op.line)
+                if body:
+                    cost.add(self.comp_cost(body.group(1).lstrip("%"),
+                                            flops_only), trips)
+                cond = _COND_RE.search(op.line)
+                if cond:
+                    cost.add(self.comp_cost(cond.group(1).lstrip("%"),
+                                            flops_only), trips)
+                continue
+            if oc in ("call", "conditional"):
+                for sub in _ATTR_COMP_RE.findall(op.line):
+                    cost.add(self.comp_cost(sub.lstrip("%"), flops_only))
+                continue
+            if oc == "fusion":
+                sub = _ATTR_COMP_RE.search(op.line)
+                sub_name = sub.group(1).lstrip("%") if sub else None
+                if sub_name:
+                    cost.add(self.comp_cost(sub_name, flops_only=True))
+                if not flops_only:
+                    root_oc = self._fusion_root_opcode(sub_name)
+                    if root_oc == "dynamic-update-slice":
+                        # in-place slice write: traffic ~ 2x the update
+                        # payload, NOT the whole buffer (a scan writing per-
+                        # layer KV back into the stacked cache would
+                        # otherwise count the full cache x trip count)
+                        ops_b = [
+                            _shape_elems_bytes(
+                                self.symbols.get(cname, {}).get(nm, ""))[1]
+                            for nm in self._operand_names(op)]
+                        ops_b = [x for x in ops_b if x > 0]
+                        upd = min(ops_b) if ops_b else 0
+                        cost.mem_bytes += 2.0 * upd
+                    elif root_oc == "dynamic-slice":
+                        # slice-reading fusion: touched region ~ 2x output
+                        cost.mem_bytes += 2.0 * self._output_bytes(op, cname)
+                    else:
+                        cost.mem_bytes += (self._output_bytes(op, cname)
+                                           + self._operand_bytes(op, cname))
+                continue
+            if oc == "dot":
+                cost.dot_flops += self._dot_flops(op, cname)
+                if not flops_only:
+                    cost.mem_bytes += (self._output_bytes(op, cname)
+                                       + self._operand_bytes(op, cname))
+                continue
+            if oc in _EW_OPS:
+                elems, out_b = _shape_elems_bytes(op.type_str)
+                cost.ew_flops += elems
+                if not flops_only:
+                    # output bytes only: on TPU, XLA fuses elementwise chains
+                    # into producers/consumers — counting operand re-reads at
+                    # every unfused CPU-HLO op would overstate HBM traffic
+                    cost.mem_bytes += out_b
+                continue
+            if oc in ("dynamic-slice", "slice", "gather", "take"):
+                # reads only the sliced region, NOT the full operand — a
+                # scan-over-layers slices the whole stacked weights every
+                # iteration and counting operands would multiply total weight
+                # bytes by the trip count (measured 200x inflation)
+                if not flops_only:
+                    cost.mem_bytes += 2.0 * self._output_bytes(op, cname)
+                continue
+            if oc in ("dynamic-update-slice", "scatter", "scatter-add"):
+                # in-place update: traffic ~ 2x the update payload (read +
+                # write of the touched region), not the whole buffer
+                if not flops_only:
+                    names_ops = self._operand_names(op)
+                    upd_b = 0.0
+                    if len(names_ops) >= 2:
+                        t = self.symbols.get(cname, {}).get(names_ops[1], "")
+                        upd_b = _shape_elems_bytes(t)[1]
+                    cost.mem_bytes += (2.0 * upd_b if upd_b
+                                       else 2.0 * self._output_bytes(op, cname))
+                continue
+            if oc in _SKIP_MEM:
+                if oc == "custom-call" and not flops_only:
+                    cost.mem_bytes += (self._output_bytes(op, cname)
+                                       + self._operand_bytes(op, cname))
+                continue
+            if not flops_only:
+                cost.mem_bytes += (self._output_bytes(op, cname)
+                                   + self._operand_bytes(op, cname))
+        self._memo[key] = cost
+        return cost
+
+    def module_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze_hlo(text: str) -> dict[str, Any]:
+    return HloAnalyzer(text).module_cost().as_dict()

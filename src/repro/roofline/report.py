@@ -1,0 +1,120 @@
+"""Roofline report: artifacts/dryrun/*.json -> markdown tables.
+
+Usage:  PYTHONPATH=src python -m repro.roofline.report [--dir artifacts/dryrun]
+
+Emits the §Dry-run and §Roofline tables EXPERIMENTS.md embeds: per
+(arch × shape × mesh) the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs usefulness ratio, and the per-device memory footprint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.roofline.analysis import PEAK_FLOPS
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "qwen1.5-4b", "gemma-2b", "starcoder2-7b", "qwen3-8b", "xlstm-1.3b",
+    "granite-moe-3b-a800m", "mixtral-8x22b", "qwen2-vl-7b", "whisper-small",
+    "zamba2-7b",
+]
+
+
+def load(dirname: str) -> list[dict]:
+    out = []
+    for f in glob.glob(os.path.join(dirname, "*.json")):
+        if os.path.basename(f).startswith(("baseline", "hillclimb")):
+            continue
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def _fmt_t(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def _sortkey(r):
+    a = ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER else 99
+    s = SHAPE_ORDER.index(r["shape"]) if r["shape"] in SHAPE_ORDER else 99
+    return (a, s)
+
+
+def dryrun_table(records: list[dict], mesh: str) -> str:
+    rows = ["| arch | shape | status | compile | peak GB/dev | args GB | "
+            "temp GB | collective ops |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted([r for r in records if r["mesh"] == mesh], key=_sortkey):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP — {r['reason'][:42]} "
+                        "| — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | **ERROR** | — | — | — | — | — |")
+            continue
+        m = r["memory_analysis"]
+        ncoll = sum(int(v["count"]) for v in r["collectives"].values()
+                    if isinstance(v, dict))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.0f}s "
+            f"| {m['peak_bytes_est']/1e9:.2f} | {m['argument_bytes']/1e9:.2f} "
+            f"| {m['temp_bytes']/1e9:.2f} | {ncoll} |")
+    return "\n".join(rows)
+
+
+def roofline_table(records: list[dict], mesh: str = "pod16x16") -> str:
+    rows = ["| arch | shape | t_compute | t_memory | t_collective | bound | "
+            "MODEL/HLO flops | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted([r for r in records if r["mesh"] == mesh], key=_sortkey):
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        mf = r["model_flops"]
+        useful = mf["model_flops_per_dev"] / max(rf["flops_per_dev"], 1)
+        # roofline fraction: useful-FLOPs time at peak / bound time
+        frac = (mf["model_flops_per_dev"] / PEAK_FLOPS) / max(rf["t_bound_s"], 1e-12)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_t(rf['t_compute_s'])} "
+            f"| {_fmt_t(rf['t_memory_s'])} | {_fmt_t(rf['t_collective_s'])} "
+            f"| {rf['bottleneck']} | {useful:.2f} | {frac*100:.1f}% |")
+    return "\n".join(rows)
+
+
+def summary(records: list[dict]) -> str:
+    lines = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rs = [r for r in records if r["mesh"] == mesh]
+        ok = sum(r["status"] == "ok" for r in rs)
+        skip = sum(r["status"] == "skipped" for r in rs)
+        err = len(rs) - ok - skip
+        lines.append(f"- mesh {mesh}: {ok} ok / {skip} skipped / {err} error "
+                     f"(of {len(rs)} cells)")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    args = ap.parse_args()
+    records = load(args.dir)
+    print("## Summary\n")
+    print(summary(records))
+    print("\n## Dry-run, single pod (16x16)\n")
+    print(dryrun_table(records, "pod16x16"))
+    print("\n## Dry-run, multi-pod (2x16x16)\n")
+    print(dryrun_table(records, "pod2x16x16"))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table(records, "pod16x16"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Serving engine: batched decode over a request queue (EdgeLLM §IV-B).
+
+The paper's deployment: FPGA as the inference server, a Python client that
+encodes/decodes token ids; the compiler pre-builds per-token-length
+instruction streams and the host pipelines instruction upload behind device
+compute (Fig. 9).  The JAX restatement:
+
+* ``Engine`` holds quantized params + a prefill/decode executable pair per
+  token-length *bucket* (``CompileCache`` + ``TokenBuckets`` from
+  core/compiler.py — the dynamic-compilation half);
+* requests join a queue; a scheduler packs them into the fixed decode batch
+  (continuous-batching style: finished rows are refilled from the queue);
+* JAX's async dispatch IS the Fig. 9 latency hiding: the host prepares the
+  next step's inputs while the device executes — ``core/pipeline.py``
+  measures that overlap explicitly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compiler import CompileCache, TokenBuckets
+from repro.models import api
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (len,) int32
+    max_new_tokens: int = 32
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    submitted_at: float = 0.0
+    first_token_at: float | None = None
+    finished_at: float | None = None
+
+
+class Engine:
+    """Single-host batched decode engine with bucketed prefill."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *, batch_size: int = 4,
+                 max_len: int = 512, eos_id: int | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.buckets = TokenBuckets(max_tokens=max_len)
+        self.cache_compiles = CompileCache()
+        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._decode_fn = jax.jit(
+            lambda p, c, t, l: api.decode_step(cfg, p, c, t, l))
+        self.steps = 0
+
+    # -- client API ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.submitted_at = time.monotonic()
+        self._queue.put(req)
+
+    # -- internals -----------------------------------------------------------
+
+    def _prefill_one(self, req: Request):
+        """Prefill a single request at its length bucket."""
+        bucket = self.buckets.bucket(len(req.prompt))
+
+        def build():
+            def fn(p, tokens):
+                return api.prefill(self.cfg, p, {"tokens": tokens}, self.max_len)
+            return jax.jit(fn)
+
+        fn = self.cache_compiles.get("prefill", bucket, build)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, -len(req.prompt):] = req.prompt  # left-pad into the bucket
+        logits, cache = fn(self.params, jnp.asarray(padded))
+        return logits, cache, bucket
+
+    def run(self, *, max_steps: int = 10_000,
+            sample: Callable | None = None) -> list[Request]:
+        """Drain the queue; returns completed requests.
+
+        Simple generational batching: take up to ``batch`` requests, prefill
+        each, decode them in lockstep until all finish, repeat.  (True
+        continuous batching needs per-row cache paging; the scheduler and
+        queue plumbing here are the production-shaped parts.)
+        """
+        completed: list[Request] = []
+        while not self._queue.empty() and self.steps < max_steps:
+            group: list[Request] = []
+            while len(group) < self.batch and not self._queue.empty():
+                group.append(self._queue.get())
+
+            states = [self._prefill_one(r) for r in group]
+            lengths = [self.buckets.bucket(len(r.prompt)) for r in group]
+            caches = [s[1] for s in states]
+            last_logits = [s[0] for s in states]
+
+            for r, lg in zip(group, last_logits):
+                tok = int(np.argmax(np.asarray(lg[0])))
+                r.output.append(tok)
+                r.first_token_at = time.monotonic()
+
+            # lockstep decode (per-request cache; batch=1 decode calls are
+            # grouped by bucket through the compile cache)
+            alive = list(range(len(group)))
+            while alive and self.steps < max_steps:
+                self.steps += 1
+                still = []
+                for i in alive:
+                    r = group[i]
+                    tok = r.output[-1]
+                    lengths[i] += 1
+                    logits, caches[i] = self._decode_fn(
+                        self.params, caches[i],
+                        jnp.asarray([[tok]], jnp.int32),
+                        jnp.int32(lengths[i]))
+                    nxt = (int(np.argmax(np.asarray(logits[0])))
+                           if sample is None else sample(logits[0]))
+                    r.output.append(nxt)
+                    if (len(r.output) >= r.max_new_tokens or
+                            (self.eos_id is not None and nxt == self.eos_id)):
+                        r.done = True
+                        r.finished_at = time.monotonic()
+                        completed.append(r)
+                    else:
+                        still.append(i)
+                alive = still
+        return completed
+
+    # -- metrics ---------------------------------------------------------------
+
+    @staticmethod
+    def summarize(reqs: list[Request]) -> dict[str, float]:
+        if not reqs:
+            return {}
+        ttft = [r.first_token_at - r.submitted_at for r in reqs
+                if r.first_token_at]
+        tps = [len(r.output) / max(r.finished_at - r.submitted_at, 1e-9)
+               for r in reqs if r.finished_at]
+        return {
+            "n": len(reqs),
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else float("nan"),
+            "mean_tokens_per_s": float(np.mean(tps)) if tps else float("nan"),
+        }

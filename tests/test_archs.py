@@ -1,0 +1,199 @@
+"""Per-architecture smoke tests: reduced config, one forward / train-grad /
+prefill+decode step on CPU; assert output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config, get_config, SHAPES, skip_reason
+from repro.models import api
+
+ALL = ARCHS + ["chatglm-6b", "qwen-7b"]
+
+
+def _batch(cfg, rng, batch=2, seq=16):
+    tokens = jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)
+    b = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "audio":
+        b["frames"] = jax.random.normal(
+            rng, (batch, cfg.encoder_frames, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_forward_shapes_no_nans(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = api.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+    logits, aux = api.forward(cfg, params, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    assert not np.isnan(float(aux))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_train_grad_step(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = api.init_params(cfg, rng)
+    batch = _batch(cfg, rng)
+
+    def loss(p):
+        l, _ = api.loss_fn(cfg, p, batch)
+        return l
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val))
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no gradients"
+    for g in leaves:
+        assert not np.any(np.isnan(np.asarray(g, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_prefill_then_decode(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = api.init_params(cfg, rng)
+    batch = _batch(cfg, rng, batch=2, seq=8)
+    max_len = 32
+    logits, cache = api.prefill(cfg, params, batch, max_len)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    # one decode step
+    next_tok = jnp.argmax(logits, axis=-1)[:, None]
+    logits2, cache2 = api.decode_step(cfg, params, cache, next_tok,
+                                      jnp.int32(9))
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits2, np.float32)))
+    # cache tree structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-4b", "xlstm-1.3b", "zamba2-7b"])
+def test_decode_matches_forward(arch, rng):
+    """Sequential decode of a short prompt must agree with the parallel
+    forward pass (the KV-cache / recurrent-state correctness invariant)."""
+    cfg = get_smoke_config(arch)
+    params = api.init_params(cfg, rng)
+    seq = 8
+    tokens = jax.random.randint(rng, (1, seq), 0, cfg.vocab_size)
+    full_logits, _ = api.forward(cfg, params, {"tokens": tokens})
+
+    cache = api.init_cache(cfg, 1, 16)
+    outs = []
+    for t in range(seq):
+        logits, cache = api.decode_step(
+            cfg, params, cache, tokens[:, t:t + 1], jnp.int32(t + 1))
+        outs.append(logits)
+    dec = np.stack([np.asarray(o, np.float32) for o in outs], axis=1)
+    np.testing.assert_allclose(
+        dec, np.asarray(full_logits, np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_full_configs_match_assignment():
+    """Pin the assignment-exact numbers for every full config."""
+    expect = {
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == (L, d, h, kv, ff, v), (arch, got)
+    assert get_config("mixtral-8x22b").n_experts == 8
+    assert get_config("mixtral-8x22b").top_k == 2
+    assert get_config("granite-moe-3b-a800m").n_experts == 40
+    assert get_config("granite-moe-3b-a800m").top_k == 8
+    assert get_config("zamba2-7b").ssm_state == 64
+
+
+def test_skip_rules():
+    # long_500k must run exactly for the sub-quadratic archs
+    runs = [a for a in ARCHS if skip_reason(a, "long_500k") is None]
+    assert sorted(runs) == ["mixtral-8x22b", "xlstm-1.3b", "zamba2-7b"]
+    for a in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert skip_reason(a, s) is None
+
+
+class TestMlstmChunked:
+    """Chunkwise mLSTM == quadratic parallel form == recurrent decode."""
+
+    def test_chunked_equals_parallel(self):
+        import numpy as np
+        from repro.models import xlstm
+        rng = np.random.default_rng(0)
+        b, h, L, dh = 2, 3, 200, 16
+        mk = lambda *s: jnp.asarray(rng.normal(0, 1, s).astype(np.float32))
+        q, k, v = mk(b, h, L, dh), mk(b, h, L, dh), mk(b, h, L, dh)
+        ig, fg = mk(b, h, L), mk(b, h, L) + 2.0
+        full = xlstm._mlstm_parallel(q, k, v, ig, fg)
+        chunked = xlstm._mlstm_chunked(q, k, v, ig, fg, chunk=64)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_chunked_equals_recurrent_decode(self):
+        """xlstm smoke decode already validates recurrence == forward; here
+        force the forward through the chunked path at L > chunk."""
+        import numpy as np
+        from repro.models import xlstm
+        rng = np.random.default_rng(1)
+        b, h, L, dh = 1, 2, 300, 8
+        mk = lambda *s: jnp.asarray(rng.normal(0, 1, s).astype(np.float32))
+        q, k, v = mk(b, h, L, dh), mk(b, h, L, dh), mk(b, h, L, dh)
+        ig, fg = mk(b, h, L), mk(b, h, L) + 1.0
+        chunked = xlstm._mlstm_chunked(q, k, v, ig, fg, chunk=128)
+        full = xlstm._mlstm_parallel(q, k, v, ig, fg)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestChunkedPrefill:
+    """Chunked (Sarathi-style) prefill == one-shot prefill: same last-token
+    logits, same KV cache, same subsequent decode."""
+
+    def _run(self, arch, seq, chunk, monkeypatch, **over):
+        from repro.models import transformer
+        cfg = get_smoke_config(arch, **over)
+        params = api.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, seq), 0,
+                                    cfg.vocab_size)
+        max_len = seq + 16
+        full_logits, full_cache = transformer.prefill(cfg, params, tokens, max_len)
+        monkeypatch.setattr(transformer, "PREFILL_CHUNK", chunk)
+        ch_logits, ch_cache = transformer.prefill(cfg, params, tokens, max_len)
+        np.testing.assert_allclose(
+            np.asarray(ch_logits, np.float32), np.asarray(full_logits, np.float32),
+            rtol=2e-2, atol=2e-2)
+        # decode one token from both caches
+        nt = jnp.argmax(full_logits, axis=-1)[:, None]
+        l1, _ = api.decode_step(cfg, params, full_cache, nt, jnp.int32(seq + 1))
+        l2, _ = api.decode_step(cfg, params, ch_cache, nt, jnp.int32(seq + 1))
+        np.testing.assert_allclose(np.asarray(l1, np.float32),
+                                   np.asarray(l2, np.float32),
+                                   rtol=2e-2, atol=2e-2)
+
+    def test_dense_arch(self, monkeypatch):
+        self._run("qwen3-8b", seq=48, chunk=16, monkeypatch=monkeypatch)
+
+    def test_swa_arch(self, monkeypatch):
+        # mixtral smoke: window 64 == chunk (the rolling-buffer case).
+        # capacity_factor high enough that no tokens drop — capacity-based
+        # MoE drops depend on the routing-group length, so one-shot and
+        # chunked prefill legitimately differ when tokens overflow.
+        self._run("mixtral-8x22b", seq=192, chunk=64, monkeypatch=monkeypatch,
+                  moe_capacity_factor=4.0)

@@ -1,0 +1,107 @@
+"""Unit + property tests for block INT4 quantization (core/quant.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+class TestPackUnpack:
+    def test_roundtrip_exact(self):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.integers(-8, 8, (256, 128)).astype(np.int8))
+        packed = quant.pack_int4(q)
+        assert packed.shape == (128, 128)
+        assert packed.dtype == jnp.uint8
+        out = quant.unpack_int4(packed)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+    def test_pack_pairs_rows_within_group(self):
+        # row r and r+64 of each 128-group share a byte
+        q = jnp.zeros((128, 8), jnp.int8).at[3, :].set(5).at[67, :].set(-2)
+        packed = quant.pack_int4(q)
+        b = np.asarray(packed)[3]
+        assert np.all(b == (5 | ((-2 & 0xF) << 4)))
+
+    @given(
+        in_f=st.sampled_from([128, 256, 512]),
+        out_f=st.sampled_from([8, 128, 256]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_roundtrip_property(self, in_f, out_f, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.integers(-8, 8, (in_f, out_f)).astype(np.int8))
+        out = quant.unpack_int4(quant.pack_int4(q))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(q))
+
+
+class TestQuantize:
+    def test_shapes(self):
+        w = _rand((512, 256))
+        qt = quant.quantize(w)
+        assert qt.packed.shape == (256, 256)
+        assert qt.scales.shape == (4, 256)
+        assert qt.shape == (512, 256)
+
+    def test_roundtrip_error_small(self):
+        w = _rand((512, 256), scale=0.02)
+        qt = quant.quantize(w, scale_dtype=jnp.float32)
+        err = quant.quantization_error(w, qt)
+        # int4 symmetric: max error = scale/2 = absmax/14 per group
+        assert err["rms"] < 0.02 / 7
+        wq = quant.dequantize(qt, jnp.float32)
+        assert float(jnp.max(jnp.abs(w - wq))) <= float(jnp.max(jnp.abs(w))) / 7.0 + 1e-6
+
+    def test_exact_on_grid(self):
+        # weights already on the int4 grid quantize exactly
+        rng = np.random.default_rng(1)
+        scale = 0.5
+        q = rng.integers(-7, 8, (256, 128)).astype(np.float32)
+        q[0, :] = 7  # pin absmax so scale is exact per group
+        q[128, :] = 7
+        w = jnp.asarray(q * scale)
+        qt = quant.quantize(w, scale_dtype=jnp.float32)
+        wq = quant.dequantize(qt, jnp.float32)
+        np.testing.assert_allclose(np.asarray(wq), np.asarray(w), atol=1e-5)
+
+    def test_group_scales_independent(self):
+        # one huge group must not wreck the other group's precision
+        w = np.full((256, 8), 0.01, np.float32)
+        w[128:, :] = 100.0
+        qt = quant.quantize(jnp.asarray(w), scale_dtype=jnp.float32)
+        wq = np.asarray(quant.dequantize(qt, jnp.float32))
+        np.testing.assert_allclose(wq[:128], w[:128], rtol=0.1)
+
+    def test_rejects_bad_shape(self):
+        with pytest.raises(ValueError):
+            quant.quantize(_rand((100, 8)))
+
+    @given(seed=st.integers(0, 2**16), scale=st.floats(1e-3, 10.0))
+    @settings(max_examples=15, deadline=None)
+    def test_error_bound_property(self, seed, scale):
+        """|w - dq(q(w))| <= group_absmax / 14 + eps, for any input scale."""
+        w = _rand((256, 64), seed=seed, scale=scale)
+        qt = quant.quantize(w, scale_dtype=jnp.float32)
+        wq = quant.dequantize(qt, jnp.float32)
+        g = np.abs(np.asarray(w)).reshape(2, 128, 64).max(axis=1)  # (2, 64)
+        bound = np.repeat(g / 14.0, 128, axis=0) + 1e-6
+        assert np.all(np.abs(np.asarray(w - wq)) <= bound * 1.01)
+
+    def test_pytree_jit(self):
+        w = _rand((256, 128))
+        qt = quant.quantize(w)
+
+        @jax.jit
+        def f(q):
+            return quant.dequantize(q, jnp.float32).sum()
+
+        f(qt)  # must trace with QuantizedTensor as pytree

@@ -1,0 +1,52 @@
+"""Serving engine tests: request scheduling, bucketed prefill compile
+cache, generation metrics."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.compiler import quantize_model
+from repro.models import api
+from repro.serving.engine import Engine, Request
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("qwen-7b", d_model=128, d_ff=256, vocab_size=512)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, quantize_model(params, "dense"),
+                  batch_size=2, max_len=64)
+
+
+def test_completes_all_requests(engine):
+    rng = np.random.default_rng(0)
+    for rid in range(5):
+        engine.submit(Request(rid=rid,
+                              prompt=rng.integers(0, 512, 6).astype(np.int32),
+                              max_new_tokens=4))
+    done = engine.run()
+    assert len(done) == 5
+    assert all(len(r.output) >= 4 for r in done)
+    assert all(r.finished_at is not None for r in done)
+
+
+def test_compile_cache_buckets_reused(engine):
+    rng = np.random.default_rng(1)
+    # same-bucket prompts: prefill compiles once
+    before = engine.cache_compiles.misses
+    for rid in (10, 11):
+        engine.submit(Request(rid=rid,
+                              prompt=rng.integers(0, 512, 10).astype(np.int32),
+                              max_new_tokens=2))
+    engine.run()
+    assert engine.cache_compiles.misses - before <= 1
+
+
+def test_metrics_summary(engine):
+    rng = np.random.default_rng(2)
+    engine.submit(Request(rid=20, prompt=rng.integers(0, 512, 4).astype(np.int32),
+                          max_new_tokens=3))
+    done = engine.run()
+    s = Engine.summarize(done)
+    assert s["n"] >= 1 and s["mean_tokens_per_s"] > 0

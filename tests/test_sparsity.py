@@ -1,0 +1,140 @@
+"""Tests for log-scale structured sparsity (core/sparsity.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity
+from repro.core.quant import quantize, dequantize
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 1, shape).astype(np.float32))
+
+
+class TestPackingCostFig5:
+    """Fig. 5 table, reproduced bit for bit."""
+
+    def test_dense(self):
+        c = sparsity.packing_cost(1.0)
+        assert (c.scale_bits, c.mask_bits, c.wt_bits) == (256, 0, 8192)
+        assert c.total_bits == 8448
+        assert c.effective_bitwidth() == pytest.approx(4.125)
+
+    def test_50pct_one_hot(self):
+        c = sparsity.packing_cost(0.5, "one-hot")
+        assert (c.scale_bits, c.mask_bits, c.wt_bits) == (256, 2048, 4096)
+        assert c.total_bits == 6400
+        assert c.effective_bitwidth() == pytest.approx(3.125)
+
+    def test_50pct_addr_in_block_is_worse(self):
+        c = sparsity.packing_cost(0.5, "addr-in-block")
+        assert c.mask_bits == 4096  # paper: "not efficient here"
+        auto = sparsity.packing_cost(0.5, "auto")
+        assert auto.encoding == "one-hot"
+
+    def test_75pct_addr_in_block(self):
+        c = sparsity.packing_cost(0.75 and 0.25)  # density 0.25 = 75% sparse
+        c = sparsity.packing_cost(0.25, "addr-in-block")
+        assert (c.scale_bits, c.mask_bits, c.wt_bits) == (256, 1536, 2048)
+        assert c.total_bits == 3840
+        assert c.effective_bitwidth() == pytest.approx(1.875)
+
+    def test_875pct_both_encodings(self):
+        one_hot = sparsity.packing_cost(0.125, "one-hot")
+        assert one_hot.total_bits == 3328
+        assert one_hot.effective_bitwidth() == pytest.approx(1.625)
+        addr = sparsity.packing_cost(0.125, "addr-in-block")
+        assert addr.mask_bits == 1024
+        assert addr.total_bits == 2304
+        assert addr.effective_bitwidth() == pytest.approx(1.125)
+        assert sparsity.packing_cost(0.125, "auto").encoding == "addr-in-block"
+
+    def test_enhancement_ratios(self):
+        # paper: 1.32x, 2.2x, 2.54x (one-hot) and 3.67x at 87.5%
+        assert sparsity.enhancement_ratio(0.5) == pytest.approx(8448 / 6400, rel=1e-6)
+        assert sparsity.enhancement_ratio(0.25) == pytest.approx(2.2, abs=0.01)
+        assert sparsity.packing_cost(1.0).total_bits / sparsity.packing_cost(
+            0.125, "one-hot").total_bits == pytest.approx(2.54, abs=0.01)
+        assert sparsity.enhancement_ratio(0.125) == pytest.approx(3.67, abs=0.01)
+
+
+class TestNMMask:
+    @given(
+        density=st.sampled_from([0.5, 0.25, 0.125]),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_density_exact(self, density, seed):
+        w = _rand((256, 64), seed)
+        mask = sparsity.nm_magnitude_mask(w, density)
+        m = np.asarray(mask).reshape(-1, 8, 64)
+        counts = m.sum(axis=1)
+        assert np.all(counts == int(density * 8))
+
+    def test_keeps_largest(self):
+        w = np.zeros((8, 1), np.float32)
+        w[2, 0], w[5, 0] = 3.0, -9.0
+        mask = np.asarray(sparsity.nm_magnitude_mask(jnp.asarray(w), 0.25))
+        assert mask[5, 0] and mask[2, 0]
+        assert mask.sum() == 2
+
+    def test_masked_error_below_unstructured_bound(self):
+        """Pruning 50% k-of-8 must retain at least 50% of L1 mass (it keeps
+        the largest half of every group)."""
+        w = _rand((512, 128), 3)
+        sw = sparsity.apply_nm_sparsity(w, 0.5)
+        assert float(jnp.abs(sw).sum()) >= 0.5 * float(jnp.abs(w).sum())
+
+
+class TestBlockSparse:
+    def test_shapes_and_indices(self):
+        w = _rand((2048, 256), 7)
+        st_ = sparsity.block_sparsify_quantize(w, 0.25)
+        out_tiles, S = 2, 2 * 2  # 16 blocks -> 2 groups, k=2 each
+        assert st_.packed.shape == (out_tiles, S, 64, 128)
+        assert st_.scales.shape == (out_tiles, S, 128)
+        assert st_.block_idx.shape == (out_tiles, S)
+        idx = np.asarray(st_.block_idx)
+        # ascending within each out tile, and within the right group range
+        assert np.all(np.diff(idx, axis=1) > 0)
+        assert np.all(idx[:, :2] < 8) and np.all(idx[:, 2:] >= 8)
+
+    def test_dense_density_matches_plain_quant(self):
+        w = _rand((1024, 128), 11)
+        st_ = sparsity.block_sparsify_quantize(w, 1.0)
+        wd = sparsity.sparse_dequantize(st_, jnp.float32)
+        qt = quantize(w, scale_dtype=jnp.bfloat16)
+        np.testing.assert_allclose(
+            np.asarray(wd), np.asarray(dequantize(qt, jnp.float32)), atol=1e-6)
+
+    @given(density=st.sampled_from([0.5, 0.25, 0.125]), seed=st.integers(0, 1000))
+    @settings(max_examples=10, deadline=None)
+    def test_sparse_dequant_supported_on_kept_blocks_only(self, density, seed):
+        w = _rand((1024, 128), seed)
+        st_ = sparsity.block_sparsify_quantize(w, density)
+        wd = np.asarray(sparsity.sparse_dequantize(st_, jnp.float32))
+        blocks = wd.reshape(8, 128, 128)
+        nz = np.array([np.abs(b).sum() > 0 for b in blocks])
+        assert nz.sum() == int(density * 8)
+        # kept blocks match the plain dense quantization of those blocks
+        idx = np.asarray(st_.block_idx)[0]
+        qt = quantize(w, scale_dtype=jnp.bfloat16)
+        wq = np.asarray(dequantize(qt, jnp.float32)).reshape(8, 128, 128)
+        for i in idx:
+            np.testing.assert_allclose(blocks[i], wq[i], atol=1e-6)
+
+    def test_importance_selection(self):
+        # make block 3 of group 0 overwhelmingly important
+        w = np.full((1024, 128), 0.01, np.float32)
+        w[3 * 128:4 * 128, :] = 5.0
+        st_ = sparsity.block_sparsify_quantize(jnp.asarray(w), 0.125)
+        assert int(np.asarray(st_.block_idx)[0, 0]) == 3
+
+    def test_nbytes_tracks_density(self):
+        w = _rand((2048, 256), 13)
+        dense_b = sparsity.block_sparsify_quantize(w, 1.0).nbytes_model
+        half_b = sparsity.block_sparsify_quantize(w, 0.5).nbytes_model
+        assert half_b < 0.56 * dense_b
