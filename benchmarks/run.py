@@ -17,6 +17,7 @@ MODULES = [
     "fig11_scaling",
     "table5_efficiency",
     "kernel_bench",
+    "serving_bench",
 ]
 
 

@@ -1,5 +1,9 @@
-"""Serving example: batched requests through the quantized engine
+"""Serving example: continuous batching through the quantized engine
 (the paper's client/server deployment, §IV-B).
+
+All requests share one slot-based KV cache; each step is a single jitted
+decode over every slot with per-row lengths, and finished slots are
+refilled from the queue mid-flight.
 
 Run:  PYTHONPATH=src python examples/serve.py
 """
@@ -29,6 +33,9 @@ def main() -> None:
     for r in sorted(done, key=lambda r: r.rid):
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.output[:8]}...")
     print("summary:", Engine.summarize(done))
+    print(f"scheduler: {engine.steps} batched steps "
+          f"({engine.decode_calls} decode dispatches), "
+          f"slot occupancy {engine.slot_occupancy:.2f}")
     print(f"compile cache: {len(engine.cache_compiles)} executables, "
           f"{engine.cache_compiles.hits} hits / "
           f"{engine.cache_compiles.misses} misses (dynamic compilation)")

@@ -187,21 +187,42 @@ class TokenBuckets:
 
 
 class CompileCache:
-    """Memoized jit executables per (name, bucket) — dynamic compilation."""
+    """Memoized jit executables per (name, key) — dynamic compilation.
+
+    Serving uses three key families (the paper's pre-compiled executable
+    set from Fig. 9, restated for XLA's static shapes):
+
+    * ``("prefill", bucket)`` — batch-1 prompt prefill, one per token-length
+      bucket (``TokenBuckets``);
+    * ``("decode", B)`` — THE batched decode step: one executable per
+      resident slot-batch size, shared by every request at every step;
+    * ``("insert", B)`` — the slot scatter behind ``insert_request`` /
+      ``evict_slot`` (the slot index is a traced operand, so one executable
+      covers all B slots).
+
+    Total serving executables are therefore bounded by ``n_buckets + 2``
+    per engine regardless of traffic — the JAX restatement of the paper's
+    "17 operators x B buckets" instruction-stream budget.
+    """
 
     def __init__(self):
         self._cache: dict[tuple, Any] = {}
         self.hits = 0
         self.misses = 0
+        self.misses_by_name: dict[str, int] = {}
 
     def get(self, name: str, bucket: int, build: Callable[[], Any]):
         key = (name, bucket)
         if key not in self._cache:
             self._cache[key] = build()
             self.misses += 1
+            self.misses_by_name[name] = self.misses_by_name.get(name, 0) + 1
         else:
             self.hits += 1
         return self._cache[key]
+
+    def keys(self) -> list[tuple]:
+        return list(self._cache)
 
     def __len__(self):
         return len(self._cache)

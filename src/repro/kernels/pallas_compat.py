@@ -1,0 +1,19 @@
+"""Pallas API compatibility.
+
+``pltpu.TPUCompilerParams`` (jax 0.4.x) was renamed ``pltpu.CompilerParams``
+in later releases; the fields the kernels use (``dimension_semantics``) are
+identical.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+try:
+    CompilerParams = pltpu.CompilerParams
+except AttributeError:
+    try:
+        CompilerParams = pltpu.TPUCompilerParams
+    except AttributeError as e:  # pre-dataclass jax versions
+        raise ImportError(
+            "this jax version exposes neither pltpu.CompilerParams nor "
+            "pltpu.TPUCompilerParams; the Pallas kernels need jax >= 0.4.31"
+        ) from e

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 __all__ = ["slstm_scan_pallas"]
 
 
@@ -102,7 +104,7 @@ def slstm_scan_pallas(
         out_shape=jax.ShapeDtypeStruct((b, L, heads, dh), gates_x.dtype),
         scratch_shapes=[pltpu.VMEM((heads, dh), jnp.float32)] * 3
         + [pltpu.VMEM((heads, dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 from repro.core.quant import GROUP_SIZE
 from repro.core.sparsity import SparseQuantizedTensor
 
@@ -116,7 +118,7 @@ def sparse_w4a16_matmul_pallas(
             scratch_shapes=[pltpu.VMEM((bt, GROUP_SIZE), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((x2.shape[0], out_f), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

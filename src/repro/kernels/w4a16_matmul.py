@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 from repro.core.quant import GROUP_SIZE, QuantizedTensor
 
 __all__ = ["w4a16_matmul_pallas"]
@@ -115,7 +117,7 @@ def w4a16_matmul_pallas(
         out_specs=pl.BlockSpec((bt, bo), lambda t, o, g: (t, o)),
         out_shape=jax.ShapeDtypeStruct((x2.shape[0], out_f), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, bo), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

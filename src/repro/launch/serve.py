@@ -1,8 +1,10 @@
 """Serving launcher: ``python -m repro.launch.serve --arch qwen-7b ...``
 
-Builds a quantized model (the paper's compiler), starts the batched decode
-engine and runs a synthetic request workload — the container-scale stand-in
-for the paper's LAN client/server deployment.
+Builds a quantized model (the paper's compiler), starts the slot-based
+continuous-batching engine and runs a synthetic request workload — the
+container-scale stand-in for the paper's LAN client/server deployment.
+One jitted decode call advances all slots per step; finished rows are
+evicted and refilled from the queue mid-flight.
 """
 
 from __future__ import annotations
@@ -48,8 +50,12 @@ def main() -> None:
             max_new_tokens=args.max_new_tokens))
     done = engine.run()
     print("summary:", Engine.summarize(done))
-    print(f"compile cache: {len(engine.cache_compiles)} executables "
-          f"({engine.cache_compiles.hits} hits)")
+    print(f"scheduler: {engine.steps} steps, {engine.decode_calls} decode "
+          f"dispatches (1 per step), slot occupancy "
+          f"{engine.slot_occupancy:.2f}")
+    print(f"compile cache: {sorted(engine.cache_compiles.keys())} "
+          f"({engine.cache_compiles.hits} hits, "
+          f"misses by kind {engine.cache_compiles.misses_by_name})")
 
 
 if __name__ == "__main__":

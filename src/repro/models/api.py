@@ -8,6 +8,20 @@
 
 ``batch`` is a dict: {"tokens": (B,S)} plus family extras
 ({"frames": (B,F,d)} for audio, optional {"vision_embeds"} for vlm).
+
+Slot-based serving surface (continuous batching, EdgeLLM §IV-B):
+
+    cache_slot_axes(cfg)                       -> pytree of ints
+    insert_request(cfg, cache, row, slot)      -> cache with row at slot
+    evict_slot(cfg, cache, slot, max_len)      -> cache with slot reset
+
+``init_cache(cfg, B, max_len)`` allocates ONE resident cache whose request
+dimension is a *slot* index.  A prefill runs at batch 1 and its cache is
+scattered into a free slot (``insert_request``); ``decode_step`` then
+advances every slot at once with per-row ``lengths: (B,)``.  ``evict_slot``
+re-inserts a freshly-initialized row — for recurrent families this is the
+per-row state reset that makes slot reuse safe.  All three are jit-safe with
+a traced ``slot`` (one executable per batch size, not per slot).
 """
 
 from __future__ import annotations
@@ -77,6 +91,46 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     if cfg.family == "audio":
         return whisper.init_cache(cfg, batch, max_len)
     raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def cache_slot_axes(cfg: ModelConfig) -> Params:
+    """Pytree (cache structure) of ints: the request-slot axis of each leaf."""
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.cache_slot_axes(cfg)
+    if cfg.family == "ssm":
+        return xlstm_stack.cache_slot_axes(cfg)
+    if cfg.family == "hybrid":
+        return zamba.cache_slot_axes(cfg)
+    if cfg.family == "audio":
+        return whisper.cache_slot_axes(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def insert_request(cfg: ModelConfig, cache: Params, row_cache: Params,
+                   slot) -> Params:
+    """Scatter a batch-1 cache (one prefilled request) into ``slot``.
+
+    ``slot`` may be a traced int32 scalar — the scatter is a
+    ``dynamic_update_slice_in_dim`` per leaf, so one jitted executable
+    serves every slot of a given batch size.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def ins(dst, row, axis):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, row.astype(dst.dtype), slot, axis=axis)
+
+    return jax.tree.map(ins, cache, row_cache, cache_slot_axes(cfg))
+
+
+def evict_slot(cfg: ModelConfig, cache: Params, slot, max_len: int) -> Params:
+    """Reset one slot to its freshly-initialized state.
+
+    KV rows are masked by ``lengths`` anyway, but recurrent families carry
+    state that must return to its init value (e.g. the mLSTM stabilizer
+    ``m = -1e30``) before the slot hosts the next request.
+    """
+    return insert_request(cfg, cache, init_cache(cfg, 1, max_len), slot)
 
 
 def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int):

@@ -87,6 +87,20 @@ def init_kv_cache(cfg, batch: int, max_len: int, d_model=None) -> Params:
     }
 
 
+def kv_cache_slot_axes(cfg, axis: int = 1) -> Params:
+    """Pytree (matching ``init_kv_cache`` structure) of batch/slot axes.
+
+    Callers stack per-layer caches along leading axes, so the request-slot
+    axis of each leaf is ``axis`` (1 for a single (layers, B, ...) stack).
+    Consumed by ``models.api.insert_request`` / ``evict_slot``.
+    """
+    axes: Params = {"k": axis, "v": axis}
+    if cfg.kv_quant == "int8":
+        axes["k_scale"] = axis
+        axes["v_scale"] = axis
+    return axes
+
+
 def quantize_kv(t: jax.Array) -> tuple[jax.Array, jax.Array]:
     """(…, hd) -> int8 values + per-vector absmax scale."""
     a = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
@@ -177,15 +191,27 @@ def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
         # fallback (unsharded) path: quantized write + dequantized attention
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
-        widx = write_idx if lengths.ndim == 0 else write_idx[0]
-        new_cache = {
-            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, 0, widx, 0)),
-            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, 0, widx, 0)),
-            "k_scale": jax.lax.dynamic_update_slice(
-                cache["k_scale"], ks, (0, 0, widx, 0)),
-            "v_scale": jax.lax.dynamic_update_slice(
-                cache["v_scale"], vs, (0, 0, widx, 0)),
-        }
+        if lengths.ndim == 0:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], kq, (0, 0, write_idx, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], vq, (0, 0, write_idx, 0)),
+                "k_scale": jax.lax.dynamic_update_slice(
+                    cache["k_scale"], ks, (0, 0, write_idx, 0)),
+                "v_scale": jax.lax.dynamic_update_slice(
+                    cache["v_scale"], vs, (0, 0, write_idx, 0)),
+            }
+        else:
+            # ragged batch (slot-based serving): per-row scatter
+            def upd(c, new, l):
+                return jax.lax.dynamic_update_slice(c, new, (0, l, 0))
+            new_cache = {
+                "k": jax.vmap(upd)(cache["k"], kq, write_idx),
+                "v": jax.vmap(upd)(cache["v"], vq, write_idx),
+                "k_scale": jax.vmap(upd)(cache["k_scale"], ks, write_idx),
+                "v_scale": jax.vmap(upd)(cache["v_scale"], vs, write_idx),
+            }
         k_full = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
         v_full = dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
         o = ops.decode_attention(q, k_full, v_full, attn_len,

@@ -135,6 +135,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
         one)
 
 
+def cache_slot_axes(cfg: ModelConfig) -> Params:
+    """Request-slot axis per cache leaf: (n_layers, B, hkv, L, hd) -> axis 1."""
+    return attention.kv_cache_slot_axes(cfg, axis=1)
+
+
 PREFILL_CHUNK = 4096
 
 

@@ -135,6 +135,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     return {"self": self_kv, "cross": cross}
 
 
+def cache_slot_axes(cfg: ModelConfig) -> Params:
+    """Request-slot axis per cache leaf.
+
+    Both the self-attention KV and the per-request *cross* K/V (computed
+    once from that request's encoder output) live at axis 1 of their
+    (n_layers, B, ...) stacks; inserting a prefill row replaces both, so a
+    reused slot never attends to a previous request's audio.
+    """
+    return {
+        "self": attention.kv_cache_slot_axes(cfg, axis=1),
+        "cross": {"k": 1, "v": 1},
+    }
+
+
 def prefill(cfg: ModelConfig, params: Params, frames: jax.Array,
             tokens: jax.Array, max_len: int):
     """Encode audio, run the decoder prompt, build all caches."""

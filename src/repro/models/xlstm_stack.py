@@ -96,6 +96,25 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     return cache
 
 
+def cache_slot_axes(cfg: ModelConfig) -> Params:
+    """Request-slot axis per recurrent-state leaf.
+
+    Slot-based serving reuses rows of one resident state batch; inserting a
+    freshly-initialized row through these axes is the per-row state reset
+    (``m`` must return to -1e30, not 0 — plain zeroing would corrupt the
+    log-sum-exp stabilizer of the next request in that slot).
+    """
+    n_seg, m_per_seg, tail = _segmentation(cfg)
+    mc_axes = lambda ax: {"C": ax, "n": ax, "m": ax}
+    axes: Params = {}
+    if n_seg:
+        axes["mlstm_main"] = mc_axes(2)       # (n_seg, m_per_seg, B, ...)
+        axes["slstm"] = {"c": 1, "n": 1, "h": 1, "m": 1}   # (n_seg, B, ...)
+    if tail:
+        axes["mlstm_tail"] = mc_axes(1)       # (tail, B, ...)
+    return axes
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 tokens: jax.Array, lengths):
     x = params["embed"][tokens]

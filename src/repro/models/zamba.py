@@ -124,6 +124,22 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     }
 
 
+def cache_slot_axes(cfg: ModelConfig) -> Params:
+    """Request-slot axis per cache leaf (hybrid = Mamba state + shared KV).
+
+    Slot reuse must reset the Mamba conv window and SSM state per row —
+    inserting a fresh ``init_cache(cfg, 1, ...)`` row along these axes does
+    exactly that; the KV rows are overwritten by the next prefill insert.
+    """
+    seg, n_seg, tail = _segmentation(cfg)
+    m_axes = lambda ax: {"conv": ax, "state": ax}
+    return {
+        "mamba_main": m_axes(2),                        # (n_seg, seg, B, ...)
+        "mamba_tail": m_axes(1) if tail else None,      # (tail, B, ...)
+        "kv": attention.kv_cache_slot_axes(cfg, axis=1),  # (n_seg, B, ...)
+    }
+
+
 def _mamba_decode_scan(cfg, stacked: Params, x: jax.Array, caches: Params):
     def body(carry, inp):
         bp, c = inp

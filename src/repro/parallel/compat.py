@@ -1,0 +1,13 @@
+"""JAX version-compatibility shims for the parallel layer.
+
+``shard_map`` graduated from ``jax.experimental`` to the ``jax`` namespace
+in newer releases; the call sites here use keyword arguments
+(``mesh=/in_specs=/out_specs=``) that both versions accept.
+"""
+
+import jax
+
+try:
+    shard_map = jax.shard_map  # jax >= 0.5
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401

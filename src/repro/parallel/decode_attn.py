@@ -27,6 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.compat import shard_map
+
 _NEG = -1e30
 
 
@@ -141,7 +143,7 @@ def decode_attention_sharded(
     rep_spec = P(batch_ax, None, None, None)
     if quant:
         ksc, vsc = scales
-        fn = jax.shard_map(
+        fn = shard_map(
             local, mesh=mesh,
             in_specs=(rep_spec, rep_spec, rep_spec, cache_spec, cache_spec,
                       cache_spec, cache_spec, P()),
@@ -155,7 +157,7 @@ def decode_attention_sharded(
     def local_noq(q_l, kn, vn, ck, cv, length):
         return local(q_l, kn, vn, ck, cv, None, None, length)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_noq, mesh=mesh,
         in_specs=(rep_spec, rep_spec, rep_spec, cache_spec, cache_spec, P()),
         out_specs=(rep_spec, cache_spec, cache_spec),

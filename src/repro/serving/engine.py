@@ -1,18 +1,36 @@
-"""Serving engine: batched decode over a request queue (EdgeLLM §IV-B).
+"""Serving engine: slot-based continuous batching (EdgeLLM §IV-B, Fig. 9).
 
-The paper's deployment: FPGA as the inference server, a Python client that
-encodes/decodes token ids; the compiler pre-builds per-token-length
-instruction streams and the host pipelines instruction upload behind device
-compute (Fig. 9).  The JAX restatement:
+The paper's deployment keeps the accelerator saturated by pre-compiling a
+fixed executable set and pipelining host work behind device compute.  The
+JAX restatement of that contract, end to end:
 
-* ``Engine`` holds quantized params + a prefill/decode executable pair per
-  token-length *bucket* (``CompileCache`` + ``TokenBuckets`` from
-  core/compiler.py — the dynamic-compilation half);
-* requests join a queue; a scheduler packs them into the fixed decode batch
-  (continuous-batching style: finished rows are refilled from the queue);
-* JAX's async dispatch IS the Fig. 9 latency hiding: the host prepares the
-  next step's inputs while the device executes — ``core/pipeline.py``
-  measures that overlap explicitly.
+* **One resident cache.**  ``api.init_cache(cfg, B, max_len)`` allocates a
+  single slot-based cache (KV: ``(layers, B, heads, L, hd)``; recurrent
+  families: per-row state) that lives on device for the engine's lifetime.
+  Requests do not own cache pytrees — they *lease a slot*.
+
+* **Batch-1 bucketed prefill, scattered into a slot.**  A prompt prefills
+  at its ``TokenBuckets`` length bucket (the paper's per-token-length
+  instruction streams) and the resulting row cache is written into a free
+  slot with ``api.insert_request`` — a ``dynamic_update_slice`` scatter
+  whose slot index is a traced operand, so one executable covers all slots.
+
+* **One jitted decode per step, per-row lengths.**  ``api.decode_step``
+  advances ALL ``B`` slots in a single device call against the shared cache
+  with ``lengths: (B,)`` masking each row to its own context — decode cost
+  is one dispatch per step regardless of how many requests are live, not
+  O(live) Python-dispatched batch-1 calls.
+
+* **Continuous batching.**  Finished rows are retired mid-flight
+  (``api.evict_slot`` resets recurrent state) and immediately refilled from
+  the queue; the batch never drains to restart.  This is the scheduler half
+  of Fig. 9 — the host admits/retires while JAX's async dispatch overlaps
+  the next step's input prep with device compute (``core/pipeline.py``
+  measures that overlap).
+
+* **Bounded compilation.**  Executables are memoized in ``CompileCache``
+  under ``("prefill", bucket)`` / ``("decode", B)`` / ``("insert", B)`` —
+  misses are bounded by ``n_buckets + 2`` no matter the traffic.
 """
 
 from __future__ import annotations
@@ -36,6 +54,7 @@ class Request:
     rid: int
     prompt: np.ndarray               # (len,) int32
     max_new_tokens: int = 32
+    frames: np.ndarray | None = None  # (F, d) audio family only
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
@@ -44,99 +63,197 @@ class Request:
     finished_at: float | None = None
 
 
+@dataclasses.dataclass
+class _Slot:
+    """Host-side mirror of one row of the resident cache."""
+    req: Request | None = None
+    length: int = 1                  # valid context length of this row
+    last_token: int = 0              # input token for the next decode step
+
+
+def _bucketed_prompt_batch(prompt: np.ndarray, bucket: int,
+                           frames: np.ndarray | None = None) -> dict:
+    """Left-pad a prompt into its token bucket; shared by the engine and
+    the batch-1 oracle so their prefill inputs can never drift apart."""
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, -len(prompt):] = prompt
+    batch = {"tokens": jnp.asarray(padded)}
+    if frames is not None:
+        f = np.asarray(frames)
+        batch["frames"] = jnp.asarray(f[None] if f.ndim == 2 else f)
+    return batch
+
+
+def _prefill_executable(cfg: ModelConfig, max_len: int):
+    def fn(p, batch):
+        return api.prefill(cfg, p, batch, max_len)
+    return jax.jit(fn)
+
+
+def _insert_executable(cfg: ModelConfig):
+    def fn(c, row, slot):
+        return api.insert_request(cfg, c, row, slot)
+    # donate the resident cache: the engine rebinds it on every call, so XLA
+    # may update the slot in place instead of copying the whole cache
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def _decode_executable(cfg: ModelConfig):
+    def fn(p, c, tokens, lengths):
+        logits, new_c = api.decode_step(cfg, p, c, tokens, lengths)
+        return jnp.argmax(logits, axis=-1), logits, new_c
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 class Engine:
-    """Single-host batched decode engine with bucketed prefill."""
+    """Continuous-batching decode engine over one slot-based cache."""
 
     def __init__(self, cfg: ModelConfig, params: Any, *, batch_size: int = 4,
-                 max_len: int = 512, eos_id: int | None = None):
+                 max_len: int = 512, eos_id: int | None = None,
+                 compile_cache: CompileCache | None = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.eos_id = eos_id
         self.buckets = TokenBuckets(max_tokens=max_len)
-        self.cache_compiles = CompileCache()
+        # a shared compile cache must come from an engine with the same
+        # (cfg, max_len): executables bake both in
+        self.cache_compiles = compile_cache or CompileCache()
         self._queue: "queue.Queue[Request]" = queue.Queue()
-        self._decode_fn = jax.jit(
-            lambda p, c, t, l: api.decode_step(cfg, p, c, t, l))
+        # the resident slot cache (slots are reset lazily: admission
+        # overwrites every leaf of the leased row)
+        self.cache = api.init_cache(cfg, batch_size, max_len)
+        self._slots = [_Slot() for _ in range(batch_size)]
         self.steps = 0
+        self.decode_calls = 0        # must equal steps: one dispatch per step
+        self._occupancy_sum = 0.0
 
     # -- client API ----------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
+                f"engine max_len {self.max_len} — raise max_len or truncate")
         req.submitted_at = time.monotonic()
         self._queue.put(req)
+
+    # -- executables (all memoized: misses bounded by n_buckets + 2) ---------
+
+    def _build_prefill(self):
+        return _prefill_executable(self.cfg, self.max_len)
+
+    def _build_insert(self):
+        return _insert_executable(self.cfg)
+
+    def _build_decode(self):
+        return _decode_executable(self.cfg)
 
     # -- internals -----------------------------------------------------------
 
     def _prefill_one(self, req: Request):
-        """Prefill a single request at its length bucket."""
+        """Batch-1 prefill at the request's length bucket."""
         bucket = self.buckets.bucket(len(req.prompt))
+        fn = self.cache_compiles.get("prefill", bucket, self._build_prefill)
+        batch = _bucketed_prompt_batch(req.prompt, bucket, req.frames)
+        logits, row_cache = fn(self.params, batch)
+        return logits, row_cache, bucket
 
-        def build():
-            def fn(p, tokens):
-                return api.prefill(self.cfg, p, {"tokens": tokens}, self.max_len)
-            return jax.jit(fn)
+    def _finish(self, req: Request, completed: list[Request]) -> None:
+        req.done = True
+        req.finished_at = time.monotonic()
+        completed.append(req)
 
-        fn = self.cache_compiles.get("prefill", bucket, build)
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, -len(req.prompt):] = req.prompt  # left-pad into the bucket
-        logits, cache = fn(self.params, jnp.asarray(padded))
-        return logits, cache, bucket
+    def _free_slot(self, idx: int) -> None:
+        """Retire a row: release the host lease.
+
+        Device eviction is lazy — the next ``_admit`` overwrites every leaf
+        of the row (``api.evict_slot`` exists for callers that need an
+        eager reset), so retirement costs no device dispatch.  The dead row
+        rides along in decode at its parked length; its output is ignored.
+        """
+        self._slots[idx] = _Slot()
+
+    def _admit(self, req: Request, idx: int, sample, completed) -> None:
+        """Prefill ``req`` and lease slot ``idx`` to it (continuous refill)."""
+        logits, row_cache, bucket = self._prefill_one(req)
+        row = np.asarray(logits[0])        # blocks until the device is done
+        req.first_token_at = time.monotonic()
+        tok = int(np.argmax(row)) if sample is None else int(sample(row))
+        req.output.append(tok)
+        if (len(req.output) >= req.max_new_tokens or
+                bucket >= self.max_len or   # no cache room left to decode into
+                (self.eos_id is not None and tok == self.eos_id)):
+            self._finish(req, completed)   # done at prefill; slot stays free
+            return
+        insert = self.cache_compiles.get("insert", self.batch,
+                                         self._build_insert)
+        self.cache = insert(self.cache, row_cache, np.int32(idx))
+        self._slots[idx] = _Slot(req=req, length=bucket, last_token=tok)
 
     def run(self, *, max_steps: int = 10_000,
             sample: Callable | None = None) -> list[Request]:
         """Drain the queue; returns completed requests.
 
-        Simple generational batching: take up to ``batch`` requests, prefill
-        each, decode them in lockstep until all finish, repeat.  (True
-        continuous batching needs per-row cache paging; the scheduler and
-        queue plumbing here are the production-shaped parts.)
+        Each loop iteration: (1) retire rows out of cache room, (2) refill
+        every free slot from the queue (prefill + slot insert), (3) advance
+        ALL slots with exactly one jitted decode call.  ``sample`` maps a
+        logits row (V,) to a token id; greedy argmax (computed on device)
+        when None.
         """
         completed: list[Request] = []
-        while not self._queue.empty() and self.steps < max_steps:
-            group: list[Request] = []
-            while len(group) < self.batch and not self._queue.empty():
-                group.append(self._queue.get())
-
-            states = [self._prefill_one(r) for r in group]
-            lengths = [self.buckets.bucket(len(r.prompt)) for r in group]
-            caches = [s[1] for s in states]
-            last_logits = [s[0] for s in states]
-
-            for r, lg in zip(group, last_logits):
-                tok = int(np.argmax(np.asarray(lg[0])))
-                r.output.append(tok)
-                r.first_token_at = time.monotonic()
-
-            # lockstep decode (per-request cache; batch=1 decode calls are
-            # grouped by bucket through the compile cache)
-            alive = list(range(len(group)))
-            while alive and self.steps < max_steps:
-                self.steps += 1
-                still = []
-                for i in alive:
-                    r = group[i]
-                    tok = r.output[-1]
-                    lengths[i] += 1
-                    logits, caches[i] = self._decode_fn(
-                        self.params, caches[i],
-                        jnp.asarray([[tok]], jnp.int32),
-                        jnp.int32(lengths[i]))
-                    nxt = (int(np.argmax(np.asarray(logits[0])))
-                           if sample is None else sample(logits[0]))
-                    r.output.append(nxt)
-                    if (len(r.output) >= r.max_new_tokens or
-                            (self.eos_id is not None and nxt == self.eos_id)):
-                        r.done = True
-                        r.finished_at = time.monotonic()
-                        completed.append(r)
-                    else:
-                        still.append(i)
-                alive = still
+        start_steps = self.steps       # max_steps bounds THIS call, not the
+        while self.steps - start_steps < max_steps:  # engine's lifetime
+            # 1. retire rows whose context hit the cache bound
+            for i, slot in enumerate(self._slots):
+                if slot.req is not None and slot.length >= self.max_len:
+                    self._finish(slot.req, completed)
+                    self._free_slot(i)
+            # 2. continuous refill: admit queued requests into free slots
+            for i in range(self.batch):
+                while self._slots[i].req is None and not self._queue.empty():
+                    self._admit(self._queue.get(), i, sample, completed)
+            live = [i for i, s in enumerate(self._slots) if s.req is not None]
+            if not live:
+                break  # queue drained and no row in flight
+            # 3. one batched decode step for all B rows (dead rows ride along
+            #    at their parked length; their output is ignored)
+            tokens = np.fromiter((s.last_token for s in self._slots),
+                                 np.int32, self.batch).reshape(self.batch, 1)
+            lengths = np.fromiter(
+                (s.length + (1 if s.req is not None else 0)
+                 for s in self._slots), np.int32, self.batch)
+            decode = self.cache_compiles.get("decode", self.batch,
+                                             self._build_decode)
+            next_tok, logits, self.cache = decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(lengths))
+            self.steps += 1
+            self.decode_calls += 1
+            self._occupancy_sum += len(live) / self.batch
+            next_np = np.asarray(next_tok)
+            logits_np = None if sample is None else np.asarray(logits)
+            for i in live:
+                slot = self._slots[i]
+                req = slot.req
+                slot.length += 1
+                tok = (int(next_np[i]) if sample is None
+                       else int(sample(logits_np[i])))
+                req.output.append(tok)
+                slot.last_token = tok
+                if (len(req.output) >= req.max_new_tokens or
+                        (self.eos_id is not None and tok == self.eos_id)):
+                    self._finish(req, completed)
+                    self._free_slot(i)
         return completed
 
     # -- metrics ---------------------------------------------------------------
+
+    @property
+    def slot_occupancy(self) -> float:
+        """Mean fraction of slots live per decode step (1.0 = saturated)."""
+        return self._occupancy_sum / self.steps if self.steps else 0.0
 
     @staticmethod
     def summarize(reqs: list[Request]) -> dict[str, float]:
@@ -144,10 +261,47 @@ class Engine:
             return {}
         ttft = [r.first_token_at - r.submitted_at for r in reqs
                 if r.first_token_at]
-        tps = [len(r.output) / max(r.finished_at - r.submitted_at, 1e-9)
-               for r in reqs if r.finished_at]
+        # decode throughput: measured from the first token so queue-wait
+        # does not pollute the device tokens/s number
+        tps = [(len(r.output) - 1) /
+               max(r.finished_at - r.first_token_at, 1e-9)
+               for r in reqs
+               if r.finished_at and r.first_token_at and len(r.output) > 1]
         return {
             "n": len(reqs),
+            "total_tokens": float(sum(len(r.output) for r in reqs)),
             "mean_ttft_s": float(np.mean(ttft)) if ttft else float("nan"),
             "mean_tokens_per_s": float(np.mean(tps)) if tps else float("nan"),
         }
+
+
+def reference_decode(cfg: ModelConfig, params: Any, prompt: np.ndarray,
+                     max_new_tokens: int, *, max_len: int = 512,
+                     eos_id: int | None = None,
+                     frames: np.ndarray | None = None,
+                     compile_cache: CompileCache | None = None) -> list[int]:
+    """Per-request batch-1 greedy decode — the seed engine's inner loop.
+
+    Kept as (a) the numerics oracle the batched slot engine must match and
+    (b) the baseline ``benchmarks/serving_bench.py`` compares against.
+    Uses the same bucketed left-padded prefill and the same per-row-lengths
+    decode path (``lengths: (1,)``), so outputs are directly comparable.
+    """
+    cc = compile_cache if compile_cache is not None else CompileCache()
+    buckets = TokenBuckets(max_tokens=max_len)
+    bucket = buckets.bucket(len(prompt))
+    pf = cc.get("ref_prefill", bucket, lambda: jax.jit(
+        lambda p, b: api.prefill(cfg, p, b, max_len)))
+    logits, cache = pf(params, _bucketed_prompt_batch(prompt, bucket, frames))
+    out = [int(np.argmax(np.asarray(logits[0])))]
+    dec = cc.get("ref_decode", 1, lambda: jax.jit(
+        lambda p, c, t, l: api.decode_step(cfg, p, c, t, l)))
+    length = bucket
+    while (len(out) < max_new_tokens and length < max_len and
+           (eos_id is None or out[-1] != eos_id)):
+        length += 1
+        logits, cache = dec(params, cache,
+                            jnp.asarray([[out[-1]]], jnp.int32),
+                            jnp.asarray([length], jnp.int32))
+        out.append(int(np.argmax(np.asarray(logits[0]))))
+    return out

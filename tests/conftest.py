@@ -1,0 +1,14 @@
+"""Shared test setup.
+
+``pyproject.toml``'s ``pythonpath = ["src"]`` covers in-process imports; this
+conftest additionally exports ``PYTHONPATH=src`` so tests that spawn worker
+subprocesses (e.g. the multi-device harness in test_distribution.py) work
+under a bare ``python -m pytest`` too.
+"""
+
+import os
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+_existing = os.environ.get("PYTHONPATH", "")
+if _SRC not in _existing.split(os.pathsep):
+    os.environ["PYTHONPATH"] = _SRC + (os.pathsep + _existing if _existing else "")

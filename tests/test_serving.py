@@ -1,22 +1,32 @@
-"""Serving engine tests: request scheduling, bucketed prefill compile
-cache, generation metrics."""
+"""Serving engine tests: continuous batching over the slot cache, bucketed
+prefill compile cache, slot insert/evict API, generation metrics."""
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core.compiler import quantize_model
+from repro.core.compiler import CompileCache, quantize_model
 from repro.models import api
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine, Request, reference_decode
+
+# shared across reference_decode calls so the oracle compiles once per bucket
+_REF_CC = CompileCache()
 
 
 @pytest.fixture(scope="module")
-def engine():
+def setup():
     cfg = get_smoke_config("qwen-7b", d_model=128, d_ff=256, vocab_size=512)
-    params = api.init_params(cfg, jax.random.PRNGKey(0))
-    return Engine(cfg, quantize_model(params, "dense"),
-                  batch_size=2, max_len=64)
+    params = quantize_model(
+        api.init_params(cfg, jax.random.PRNGKey(0)), "dense")
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engine(setup):
+    cfg, params = setup
+    return Engine(cfg, params, batch_size=2, max_len=64)
 
 
 def test_completes_all_requests(engine):
@@ -33,20 +43,143 @@ def test_completes_all_requests(engine):
 
 def test_compile_cache_buckets_reused(engine):
     rng = np.random.default_rng(1)
-    # same-bucket prompts: prefill compiles once
-    before = engine.cache_compiles.misses
+    # same-bucket prompts: at most one new prefill executable
+    before = engine.cache_compiles.misses_by_name.get("prefill", 0)
     for rid in (10, 11):
         engine.submit(Request(rid=rid,
                               prompt=rng.integers(0, 512, 10).astype(np.int32),
                               max_new_tokens=2))
     engine.run()
-    assert engine.cache_compiles.misses - before <= 1
+    after = engine.cache_compiles.misses_by_name.get("prefill", 0)
+    assert after - before <= 1
+    # total executables bounded by buckets + (decode, insert) pair
+    assert engine.cache_compiles.misses <= \
+        len(engine.buckets.all_buckets()) + 2
+
+
+def test_continuous_batching_mixed_lengths(setup, engine):
+    """Unequal max_new_tokens arriving mid-flight: slots are refilled, one
+    decode dispatch per step, outputs equal per-request batch-1 greedy."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=100 + i,
+                    prompt=rng.integers(0, 512,
+                                        int(rng.integers(3, 20))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 8)))
+            for i in range(8)]
+    # 5 up front; 3 "arrive" while decode is in flight, via the sampler hook
+    for r in reqs[:5]:
+        engine.submit(r)
+    late = list(reqs[5:])
+
+    def sample(row):
+        if late:
+            engine.submit(late.pop())
+        return int(np.argmax(row))
+
+    steps0, calls0 = engine.steps, engine.decode_calls
+    done = engine.run(sample=sample)
+    assert len(done) == 8 and all(r.done for r in done)
+
+    # one jitted decode dispatch per step, regardless of live-request count
+    assert engine.decode_calls - calls0 == engine.steps - steps0
+    # slots were refilled mid-flight: 8 requests through 2 slots, and the
+    # batched schedule beats the serial token count
+    total_decode_tokens = sum(len(r.output) - 1 for r in done)
+    assert engine.steps - steps0 < total_decode_tokens
+    assert engine.slot_occupancy > 0.5
+
+    # compile cache stays bounded by the bucket count (+ decode/insert)
+    assert engine.cache_compiles.misses <= \
+        len(engine.buckets.all_buckets()) + 2
+
+    # numerics oracle: per-request batch-1 greedy decode
+    for r in done:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=64, compile_cache=_REF_CC)
+        assert r.output == ref, f"req {r.rid} diverged from batch-1 decode"
+
+
+@pytest.mark.parametrize("arch", ["qwen-7b", "xlstm-1.3b", "zamba2-7b",
+                                  "whisper-small"])
+def test_slot_insert_evict_roundtrip(arch):
+    """insert_request scatters one row; evict_slot restores the pristine
+    init state (recurrent families reset m to -1e30, not 0)."""
+    cfg = get_smoke_config(arch)
+    cache = api.init_cache(cfg, 3, 32)
+    row = jax.tree.map(jnp.ones_like, api.init_cache(cfg, 1, 32))
+    axes = api.cache_slot_axes(cfg)
+
+    inserted = jax.jit(
+        lambda c, r, s: api.insert_request(cfg, c, r, s))(cache, row,
+                                                          jnp.int32(1))
+
+    def check_insert(dst, orig, ax):
+        got = jnp.take(dst, 1, axis=ax)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.ones_like(np.asarray(got)))
+        # neighbors untouched
+        np.testing.assert_array_equal(np.asarray(jnp.take(dst, 0, axis=ax)),
+                                      np.asarray(jnp.take(orig, 0, axis=ax)))
+    jax.tree.map(check_insert, inserted, cache, axes)
+
+    evicted = api.evict_slot(cfg, inserted, jnp.int32(1), 32)
+
+    def check_evict(dst, orig, ax):
+        np.testing.assert_array_equal(np.asarray(jnp.take(dst, 1, axis=ax)),
+                                      np.asarray(jnp.take(orig, 1, axis=ax)))
+    jax.tree.map(check_evict, evicted, cache, axes)
+
+
+def test_prompt_bucket_at_max_len(setup, engine):
+    """A prompt whose bucket rounds up to max_len has no cache room to
+    decode into: it must finish at prefill (one token) and match the
+    oracle, not write KV past the cache bound."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, 512, 40).astype(np.int32)  # bucket(40) = 64
+    req = Request(rid=30, prompt=prompt, max_new_tokens=5)
+    engine.submit(req)
+    done = engine.run()
+    assert [r for r in done if r.rid == 30][0].output == \
+        reference_decode(cfg, params, prompt, 5, max_len=64,
+                         compile_cache=_REF_CC)
+
+
+def test_run_max_steps_is_per_call(engine):
+    """max_steps bounds one run() call; a later run() on the same engine
+    resumes the in-flight slots (the counter is not cumulative)."""
+    rng = np.random.default_rng(5)
+    engine.submit(Request(rid=50, prompt=rng.integers(0, 512, 5).astype(np.int32),
+                          max_new_tokens=6))
+    first = engine.run(max_steps=2)
+    assert first == []                    # still in flight after 2 steps
+    done = engine.run()                   # resumes and drains
+    assert [r.rid for r in done] == [50] and len(done[0].output) == 6
+
+
+def test_oversized_prompt_rejected_at_submit(engine):
+    with pytest.raises(ValueError, match="exceeds engine max_len"):
+        engine.submit(Request(rid=40, prompt=np.zeros(65, np.int32)))
 
 
 def test_metrics_summary(engine):
-    rng = np.random.default_rng(2)
+    rng = np.random.default_rng(3)
     engine.submit(Request(rid=20, prompt=rng.integers(0, 512, 4).astype(np.int32),
                           max_new_tokens=3))
     done = engine.run()
     s = Engine.summarize(done)
     assert s["n"] >= 1 and s["mean_tokens_per_s"] > 0
+
+
+def test_summarize_excludes_queue_wait():
+    """tokens/s is decode throughput (from first_token_at), so a long queue
+    wait must not drag it down."""
+    r = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=3)
+    r.output = [1, 2, 3]
+    r.submitted_at = 0.0
+    r.first_token_at = 10.0    # waited 10s in the queue
+    r.finished_at = 11.0       # then decoded 2 tokens in 1s
+    s = Engine.summarize([r])
+    assert s["mean_tokens_per_s"] == pytest.approx(2.0)
+    assert s["mean_ttft_s"] == pytest.approx(10.0)
