@@ -1,0 +1,226 @@
+"""Decode-attention roofline benchmark: dense ref vs length-blocked XLA vs
+Pallas flash-decode, with modeled HBM bytes/step.
+
+Decode is bandwidth-bound (≈1 FLOP/byte), so the metric that matters is the
+one EdgeLLM optimizes: bytes moved per step.  Three implementations of the
+same ``ops.decode_attention`` contract are swept over (B, context, kv_quant):
+
+* ``dense``   — the seed's oracle: full MAX-token cache einsum every step;
+  with int8 KV it also materialized a full-precision dequantized copy
+  (int8 read + fp write + fp read = 5x the int8 bytes).
+* ``blocked`` — while_loop over KV blocks bounded by max(lengths); int8
+  dequant fused (scale-after-dot), GQA grouped (no repeat).
+* ``pallas``  — the flash-decoding kernel: per-row block skipping with DMA
+  elision, so bytes track each row's own context.  On CPU it runs in
+  interpret mode — its *time* is meaningless there (Python-looped grid), but
+  its numerics and modeled bytes are the TPU story.
+
+``--smoke`` writes BENCH_decode.json (tokens/s + modeled bytes/step + the
+dense/blocked byte ratios) so CI records the perf trajectory per commit.
+
+Run: PYTHONPATH=src python benchmarks/decode_bench.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.decode_flash import DEFAULT_BLOCK_KV, kv_block_size
+from repro.kernels.xla_attention import DEFAULT_DECODE_BLOCK_KV
+
+_SCALE_BYTES = 4  # one f32 absmax scale per token per head, for k and for v
+
+
+def modeled_bytes_per_step(impl: str, B: int, hkv: int, d: int, S: int,
+                           lengths, quant: bool, elt: int = 2) -> int:
+    """Modeled KV bytes one decode step streams from HBM (per layer).
+
+    q/output traffic (B·hq·d·elt, context-independent) is omitted — it is
+    identical across impls and orders of magnitude below the cache term.
+    """
+    kv_elt = 1 if quant else elt
+    lens = np.minimum(np.asarray(lengths, np.int64).reshape(-1), S)
+    lens = np.broadcast_to(lens, (B,))
+    if impl == "dense":
+        per_row = 2 * S * d * kv_elt + (2 * S * _SCALE_BYTES if quant else 0)
+        if quant:
+            per_row += 2 * (2 * S * d * elt)  # dequantized copy: write + read
+        return int(B * hkv * per_row)
+    if impl == "blocked":
+        bk = min(DEFAULT_DECODE_BLOCK_KV, S)
+        nblk = int(np.ceil(lens.max() / bk))  # trip count = batch max
+        tok = B * nblk * bk
+    elif impl == "pallas":
+        bk = kv_block_size(S, DEFAULT_BLOCK_KV)
+        tok = int(np.ceil(np.maximum(lens, 1) / bk).sum()) * bk  # per row
+    else:
+        raise ValueError(impl)
+    return int(hkv * (2 * tok * d * kv_elt +
+                      (2 * tok * _SCALE_BYTES if quant else 0)))
+
+
+def _decode_call(q, k, v, lengths, ks, vs, *, impl):
+    return ops.decode_attention(q, k, v, lengths, k_scale=ks, v_scale=vs,
+                                impl=impl)
+
+
+def _timeit(fn, *args, iters: int, repeats: int = 3) -> float:
+    """us/call: best of ``repeats`` rounds of ``iters`` calls (min damps
+    scheduler noise on shared CI runners; decode steps are deterministic)."""
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e6
+
+
+def make_operands(B, hq, hkv, S, d, quant, seed=0):
+    from repro.models.attention import quantize_kv
+    rng = np.random.default_rng(seed)
+    def r(shape):
+        return jnp.asarray(rng.normal(0, 1, shape).astype(np.float32)
+                           ).astype(jnp.bfloat16)
+    q, k, v = r((B, hq, 1, d)), r((B, hkv, S, d)), r((B, hkv, S, d))
+    ks = vs = None
+    if quant:
+        k, ks = quantize_kv(k)
+        v, vs = quantize_kv(v)
+    return q, k, v, ks, vs
+
+
+def bench_cells(B=4, hq=8, hkv=2, S=2048, d=64, contexts=(128, 512, 2048),
+                impls=("dense", "blocked", "pallas"), iters=10,
+                pallas_iters=2) -> list[dict]:
+    if "pallas" in impls and kv_block_size(S, DEFAULT_BLOCK_KV) < 8:
+        # mirror the ops.decode_attention gate: the kernel would silently
+        # fall back to the blocked path, mislabeling the cell's time/bytes
+        print(f"# max_len={S} has no kv tile >= 8: skipping pallas cells")
+        impls = tuple(i for i in impls if i != "pallas")
+    # one jit wrapper per impl, shared across cells: lengths is a traced
+    # operand, so every (quant, context) cell after the first is a cache hit
+    fns = {impl: jax.jit(functools.partial(
+        _decode_call, impl={"dense": "ref", "blocked": "xla",
+                            "pallas": "pallas"}[impl])) for impl in impls}
+    cells = []
+    for quant in (False, True):
+        ops_ = make_operands(B, hq, hkv, S, d, quant)
+        for ctx in contexts:
+            lengths = jnp.full((B,), ctx, jnp.int32)
+            for impl in impls:
+                it = pallas_iters if impl == "pallas" else iters
+                us = _timeit(fns[impl], *ops_[:3], lengths, *ops_[3:],
+                             iters=it)
+                cells.append({
+                    "B": B, "context": ctx, "max_len": S,
+                    "kv_quant": "int8" if quant else "none", "impl": impl,
+                    "us_per_step": round(us, 1),
+                    "tokens_per_s": round(B / (us / 1e6), 1),
+                    "modeled_bytes_per_step": modeled_bytes_per_step(
+                        impl, B, hkv, d, S, lengths, quant),
+                })
+    return cells
+
+
+def byte_ratios(cells: list[dict]) -> dict[str, float]:
+    """dense-vs-{blocked,pallas} byte ratios at the shortest swept context."""
+    ctx = min(c["context"] for c in cells)
+    pick = {(c["kv_quant"], c["impl"]): c["modeled_bytes_per_step"]
+            for c in cells if c["context"] == ctx}
+    out = {}
+    for qn, tag in (("none", "fp16"), ("int8", "int8")):
+        for impl in ("blocked", "pallas"):
+            if (qn, impl) in pick and (qn, "dense") in pick:
+                out[f"bytes_dense_over_{impl}_{tag}"] = round(
+                    pick[(qn, "dense")] / pick[(qn, impl)], 2)
+    return out
+
+
+def serving_e2e(kv_quant: str = "int8") -> dict:
+    """End-to-end tokens/s through the slot engine with the fused path."""
+    from repro.configs import get_smoke_config
+    from repro.core.compiler import quantize_model
+    from repro.models import api
+    try:
+        from benchmarks.serving_bench import _workload, bench_batched
+    except ImportError:  # direct script execution: python benchmarks/...
+        from serving_bench import _workload, bench_batched
+    cfg = get_smoke_config("qwen3-8b", kv_quant=kv_quant)
+    params = quantize_model(api.init_params(cfg, jax.random.PRNGKey(0)),
+                            "dense")
+    r = bench_batched(cfg, params, _workload(cfg, 6, 8), batch=4, max_len=64)
+    return {"kv_quant": kv_quant, "batch": 4,
+            "tokens_per_s": round(r["tokens_per_s"], 1),
+            "occupancy": round(r["occupancy"], 3)}
+
+
+def run_smoke(path: str = "BENCH_decode.json") -> dict:
+    """CI entry: small sweep + end-to-end engine number -> one JSON."""
+    cells = bench_cells(contexts=(128, 2048), iters=5, pallas_iters=1)
+    report = {
+        "bench": "decode_attention",
+        "cells": cells,
+        "ratios": byte_ratios(cells),
+        "serving_e2e": [serving_e2e("none"), serving_e2e("int8")],
+    }
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report["ratios"], indent=2))
+    short = {(c["kv_quant"], c["impl"]): c["us_per_step"]
+             for c in cells if c["context"] == 128}
+    print(f"ctx=128/2048 step us: dense={short[('none', 'dense')]} "
+          f"blocked={short[('none', 'blocked')]}")
+    print(f"wrote {path}")
+    return report
+
+
+def rows() -> list[tuple[str, float, str]]:
+    """benchmarks.run driver entry."""
+    cells = bench_cells(contexts=(128, 2048), impls=("dense", "blocked"),
+                        iters=5)
+    out = []
+    for c in cells:
+        name = (f"decode/{c['impl']}_ctx{c['context']}"
+                f"{'_int8' if c['kv_quant'] == 'int8' else ''}")
+        out.append((name, c["us_per_step"],
+                    f"tok_s={c['tokens_per_s']:.0f} "
+                    f"bytes={c['modeled_bytes_per_step']}"))
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep -> BENCH_decode.json (CI trend record)")
+    ap.add_argument("--out", default="BENCH_decode.json")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=2048)
+    ap.add_argument("--contexts", default="128,512,2048")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run_smoke(args.out)
+        return
+    contexts = tuple(int(c) for c in args.contexts.split(","))
+    cells = bench_cells(B=args.batch, S=args.max_len, contexts=contexts)
+    print(f"{'quant':>6} {'ctx':>6} {'impl':>8} {'us/step':>9} "
+          f"{'tok/s':>9} {'bytes/step':>12}")
+    for c in cells:
+        print(f"{c['kv_quant']:>6} {c['context']:>6} {c['impl']:>8} "
+              f"{c['us_per_step']:>9.1f} {c['tokens_per_s']:>9.1f} "
+              f"{c['modeled_bytes_per_step']:>12}")
+    print(json.dumps(byte_ratios(cells), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,7 @@ MODULES = [
     "table5_efficiency",
     "kernel_bench",
     "serving_bench",
+    "decode_bench",
 ]
 
 
@@ -25,7 +26,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated module substrings")
+    ap.add_argument("--smoke", action="store_true",
+                    help="decode perf smoke -> BENCH_decode.json, then exit "
+                         "(the CI trend record)")
     args = ap.parse_args()
+
+    if args.smoke:
+        from benchmarks.decode_bench import run_smoke
+        run_smoke()
+        return
 
     selected = MODULES
     if args.only:

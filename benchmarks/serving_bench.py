@@ -85,6 +85,11 @@ def rows() -> list[tuple[str, float, str]]:
     workload = _workload(cfg, 6, 8)
     base = bench_per_request(cfg, params, workload, max_len=64)
     batched = bench_batched(cfg, params, workload, batch=4, max_len=64)
+    # same engine with an int8 KV cache: decode runs the fused-dequant
+    # blocked/pallas path end to end (decode_bench has the kernel-level cut)
+    cfg_q = get_smoke_config("qwen-7b", d_model=128, d_ff=256, vocab_size=512,
+                             kv_quant="int8")
+    batched_q = bench_batched(cfg_q, params, workload, batch=4, max_len=64)
     return [
         ("serving/per_request_tok", 1e6 / base["tokens_per_s"],
          f"tok_s={base['tokens_per_s']:.1f}"),
@@ -92,6 +97,9 @@ def rows() -> list[tuple[str, float, str]]:
          f"tok_s={batched['tokens_per_s']:.1f} "
          f"occup={batched['occupancy']:.2f} "
          f"speedup={batched['tokens_per_s'] / base['tokens_per_s']:.2f}x"),
+        ("serving/batched_b4_int8kv_tok", 1e6 / batched_q["tokens_per_s"],
+         f"tok_s={batched_q['tokens_per_s']:.1f} "
+         f"occup={batched_q['occupancy']:.2f}"),
     ]
 
 
@@ -103,9 +111,12 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--quantize", default="dense")
+    ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
+                    help="int8 = fused-dequant decode path end to end")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch, d_model=128, d_ff=256, vocab_size=512)
+    cfg = get_smoke_config(args.arch, d_model=128, d_ff=256, vocab_size=512,
+                           kv_quant=args.kv_quant)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     if args.quantize != "none":
         params = quantize_model(params, args.quantize)

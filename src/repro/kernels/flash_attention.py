@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.pallas_compat import CompilerParams, default_interpret
 
 __all__ = ["flash_attention_pallas"]
 
@@ -108,11 +108,14 @@ def flash_attention_pallas(
     scale: float | None = None,
     block_q: int = 256,
     block_kv: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Fused attention.  q (b, hq, sq, d); k/v (b, hkv, skv, d); GQA via
     hq % hkv == 0.  Causal alignment: q block sits at the end of the context.
+    ``interpret=None`` derives from the backend (Mosaic on TPU).
     """
+    if interpret is None:
+        interpret = default_interpret()
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     if hq % hkv:

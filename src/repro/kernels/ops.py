@@ -15,8 +15,6 @@ models only ever call these wrappers.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -24,12 +22,15 @@ from repro.core.quant import QuantizedTensor
 from repro.core.sparsity import SparseQuantizedTensor
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pallas_compat import default_interpret
 from repro.kernels.sparse_w4a16 import sparse_w4a16_matmul_pallas
 from repro.kernels.w4a16_matmul import w4a16_matmul_pallas
 
 __all__ = ["w4a16_matmul", "sparse_w4a16_matmul", "attention", "decode_attention"]
 
-_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+# one backend probe for the whole package: the kernels resolve their
+# interpret=None default through the same (cached) function
+_ON_TPU = not default_interpret()
 
 
 def w4a16_matmul(x: jax.Array, qt: QuantizedTensor, *, impl: str = "auto") -> jax.Array:
@@ -37,7 +38,7 @@ def w4a16_matmul(x: jax.Array, qt: QuantizedTensor, *, impl: str = "auto") -> ja
     if impl == "auto":
         impl = "pallas" if _ON_TPU else "xla"
     if impl == "pallas":
-        return w4a16_matmul_pallas(x, qt, interpret=not _ON_TPU)
+        return w4a16_matmul_pallas(x, qt)
     if impl == "xla":
         return _ref.w4a16_matmul_ref(x, qt)
     raise ValueError(f"unknown impl {impl!r}")
@@ -49,7 +50,7 @@ def sparse_w4a16_matmul(
     if impl == "auto":
         impl = "pallas" if _ON_TPU else "xla"
     if impl == "pallas":
-        return sparse_w4a16_matmul_pallas(x, st, interpret=not _ON_TPU)
+        return sparse_w4a16_matmul_pallas(x, st)
     if impl == "xla":
         # gather-then-dense-dot: same block gather the kernel does, expressed
         # as XLA take + einsum (keeps the sparse byte/FLOP savings visible to
@@ -69,7 +70,6 @@ def sparse_w4a16_matmul(
                           w.astype(jnp.float32),
                           preferred_element_type=jnp.float32)
         out = (part * st.scales.astype(jnp.float32)[None]).sum(axis=2)
-        out = out.transpose(0, 1, 2).reshape(-1, out_f) if out.ndim == 3 else out
         out = out.reshape(xb.shape[0], out_f)
         return out.astype(x.dtype).reshape(*lead, tokens, out_f)
     raise ValueError(f"unknown impl {impl!r}")
@@ -90,8 +90,7 @@ def attention(
         impl = "pallas" if _ON_TPU else "xla"
     if impl == "pallas":
         return flash_attention_pallas(
-            q, k, v, causal=causal, window=window, scale=scale,
-            interpret=not _ON_TPU)
+            q, k, v, causal=causal, window=window, scale=scale)
     if impl == "xla":
         if k.shape[2] >= 2048:
             # chunked flash recurrence: O(chunk^2) temporaries instead of
@@ -111,14 +110,48 @@ def decode_attention(
     *,
     window: int | None = None,
     scale: float | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
     impl: str = "auto",
 ) -> jax.Array:
     """One-token decode attention against a preallocated KV cache.
 
-    The XLA path is used in the distributed serve_step (the KV length mask
-    keeps addresses static under jit — the paper's MAX-token trick).
+    q (b, hq, 1, d); caches (b, hkv, MAX, d) — fp, or int8 with
+    ``k_scale``/``v_scale`` (b, hkv, MAX, 1), in which case dequant is fused
+    into the attention (scale-after-dot; the cache is read at 1 byte/value).
+
+    * ``impl="pallas"`` — the flash-decoding kernel: per-row KV-block
+      skipping, bytes and FLOPs scale with each row's actual context.
+    * ``impl="xla"``    — the length-blocked twin: a while_loop over KV
+      blocks bounded by max(lengths), per-row masking.  The hot path on CPU
+      and in the distributed serve_step (length masks keep addresses static
+      under jit — the paper's MAX-token trick).
+    * ``impl="ref"``    — the dense full-cache oracle (dequantizes the whole
+      cache first when quantized): the numerics ground truth and the
+      bandwidth baseline ``benchmarks/decode_bench.py`` measures against.
     """
     if impl == "auto":
-        impl = "xla"  # decode favors the XLA path even on TPU: tiny q
-    return _ref.decode_attention_ref(
-        q, k_cache, v_cache, length, window=window, scale=scale)
+        impl = "pallas" if _ON_TPU else "xla"
+    if impl == "pallas":
+        from repro.kernels.decode_flash import (
+            DEFAULT_BLOCK_KV, decode_flash_attention_pallas, kv_block_size)
+        if kv_block_size(k_cache.shape[2], DEFAULT_BLOCK_KV) >= 8:
+            return decode_flash_attention_pallas(
+                q, k_cache, v_cache, length, window=window, scale=scale,
+                k_scale=k_scale, v_scale=v_scale)
+        impl = "xla"  # cache length tiles too poorly for the kernel
+    if impl == "xla":
+        from repro.kernels.xla_attention import decode_attention_blocked
+        return decode_attention_blocked(
+            q, k_cache, v_cache, length, window=window, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
+    if impl == "ref":
+        k_full, v_full = k_cache, v_cache
+        if k_scale is not None:
+            # the seed's path: materialize a full-precision cache copy
+            from repro.models.attention import dequantize_kv
+            k_full = dequantize_kv(k_cache, k_scale, q.dtype)
+            v_full = dequantize_kv(v_cache, v_scale, q.dtype)
+        return _ref.decode_attention_ref(
+            q, k_full, v_full, length, window=window, scale=scale)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -3,9 +3,22 @@
 ``pltpu.TPUCompilerParams`` (jax 0.4.x) was renamed ``pltpu.CompilerParams``
 in later releases; the fields the kernels use (``dimension_semantics``) are
 identical.
+
+Also home of :func:`default_interpret` — every kernel in this package
+resolves ``interpret=None`` through it, so direct callers get the Mosaic
+lowering on TPU and the interpreter elsewhere without passing a flag.
 """
 
+import functools
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """True (interpret mode) unless a TPU backend is attached."""
+    return not any(d.platform == "tpu" for d in jax.devices())
 
 try:
     CompilerParams = pltpu.CompilerParams

@@ -142,13 +142,14 @@ def decode_attention_ref(
     hkv, max_len = k_cache.shape[1], k_cache.shape[2]
     rep = hq // hkv
     # decode = flash-decoding layout: KV sequence stays sharded over the
-    # model axis; the softmax reductions below become model-axis collectives
-    k = jnp.repeat(k_cache, rep, axis=1) if rep > 1 else k_cache
-    v = jnp.repeat(v_cache, rep, axis=1) if rep > 1 else v_cache
-    k = hint(k, "batch", None, "seq_mp", None)
-    v = hint(v, "batch", None, "seq_mp", None)
+    # model axis; the softmax reductions below become model-axis collectives.
+    # GQA is a grouped einsum (q packed (b, hkv, rep, d)) — repeating K/V to
+    # hq heads would stream rep x the cache bytes every step.
+    k = hint(k_cache, "batch", None, "seq_mp", None)
+    v = hint(v_cache, "batch", None, "seq_mp", None)
     scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
-    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+    qg = q.reshape(b, hkv, rep, d)
+    logits = jnp.einsum("bgrd,bgkd->bgrk", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
     logits = hint(logits, "batch", None, None, "seq_mp")
     pos = jnp.arange(max_len)
@@ -157,7 +158,7 @@ def decode_attention_ref(
         valid &= pos[None, :] >= (jnp.asarray(length).reshape(-1, 1) - window)
     logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bhqk,bhkd->bhqd",
+    out = jnp.einsum("bgrk,bgkd->bgrd",
                      probs.astype(q.dtype).astype(jnp.float32),
                      v.astype(jnp.float32))
-    return out.astype(q.dtype)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.pallas_compat import CompilerParams, default_interpret
 
 from repro.core.quant import GROUP_SIZE
 from repro.core.sparsity import SparseQuantizedTensor
@@ -75,13 +75,16 @@ def sparse_w4a16_matmul_pallas(
     st: SparseQuantizedTensor,
     *,
     block_tokens: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """``x @ sparse_dequant(st)`` via the scalar-prefetch block-gather kernel.
 
     ``x``: (..., tokens, in_features).  Out tile fixed at 128 (= sparsity
     granularity); contraction grid has S = density * n_blocks steps.
+    ``interpret=None`` derives from the backend (Mosaic on TPU).
     """
+    if interpret is None:
+        interpret = default_interpret()
     in_f, out_f = st.shape
     *lead, tokens, xin = x.shape
     if xin != in_f:

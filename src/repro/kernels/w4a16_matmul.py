@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pallas_compat import CompilerParams
+from repro.kernels.pallas_compat import CompilerParams, default_interpret
 
 from repro.core.quant import GROUP_SIZE, QuantizedTensor
 
@@ -80,12 +80,16 @@ def w4a16_matmul_pallas(
     *,
     block_tokens: int = 256,
     block_out: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """``x @ dequant(qt)`` via the Pallas MODE-1 kernel.
 
     ``x``: (..., tokens, in_features) bf16/f16/f32.  Returns x.dtype.
+    ``interpret=None`` derives from the backend (Mosaic on TPU, interpreter
+    elsewhere), so direct callers never run the interpreter on TPU.
     """
+    if interpret is None:
+        interpret = default_interpret()
     in_f, out_f = qt.shape
     if qt.group_size != GROUP_SIZE:
         raise ValueError("kernel assumes 128-channel groups")

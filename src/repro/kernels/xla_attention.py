@@ -16,11 +16,19 @@ flash-attention recurrence expressed with ``lax.scan`` over KV chunks:
 
 Numerics match ``attention_ref`` to bf16 tolerance (tested in
 tests/test_kernels.py::TestXlaChunkedAttention).
+
+This module also holds the *decode* twin: ``decode_attention_blocked`` runs
+the same (m, l, acc) recurrence over KV blocks of a preallocated MAX-token
+cache, but with a ``lax.while_loop`` whose trip count is
+``ceil(max(lengths)/bk)`` — compute scales with the *actual* batched context
+instead of MAX (the Pallas kernel in ``decode_flash.py`` additionally skips
+per-row).  Its per-block inner, ``decode_softmax_partials``, is shared with
+the shard_map path (``parallel/decode_attn.py``): one numerics contract —
+grouped-einsum GQA (never ``jnp.repeat`` of the cache) and int8-KV
+scale-after-dot — on every decode path.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +36,127 @@ import jax.numpy as jnp
 from repro.parallel.hints import hint
 
 _NEG_INF = -1e30
+DEFAULT_DECODE_BLOCK_KV = 256  # KV tile of the blocked decode while_loop
+
+
+def decode_softmax_partials(
+    q5: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    *,
+    scale: float,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash-decoding partial stats over one KV slice.
+
+    ``q5`` (b, g, r, 1, d) — GQA query group packed per KV head; ``k``/``v``
+    (b, g, t, d) in fp or int8; ``valid`` (b, t) bool; ``k_scale``/``v_scale``
+    (b, g, t) f32 for int8 KV (scale-after-dot, Fig. 4 Stage-3).  Returns
+    ``(m, l, acc)`` of shapes (b,g,r,1), (b,g,r,1), (b,g,r,1,d) — ready for
+    the log-sum-exp merge (across blocks or across sequence shards).
+    """
+    vmask = valid[:, None, None, None, :]
+    if k_scale is not None:
+        logits = jnp.einsum("bgrqd,bgkd->bgrqk", q5, k.astype(q5.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = logits * k_scale[:, :, None, None, :] * scale
+    else:
+        logits = jnp.einsum("bgrqd,bgkd->bgrqk", q5.astype(k.dtype), k,
+                            preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(vmask, logits, _NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(vmask, p, 0.0)
+    l = p.sum(axis=-1)
+    if v_scale is not None:
+        pv = (p * v_scale[:, :, None, None, :]).astype(q5.dtype)
+        acc = jnp.einsum("bgrqk,bgkd->bgrqd", pv, v.astype(q5.dtype),
+                         preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def decode_attention_blocked(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    block_kv: int = DEFAULT_DECODE_BLOCK_KV,
+) -> jax.Array:
+    """Length-blocked decode attention (the XLA hot path).
+
+    Same contract as ``decode_flash_attention_pallas``: q (b, hq, 1, d),
+    caches (b, hkv, MAX, d), ``lengths`` scalar or (b,).  A while_loop walks
+    KV blocks and stops after the last block any row still needs, so a
+    128-token context in a 2048-slot cache does 1/16th of the dense ref's
+    work.  Blocks a row has outgrown contribute exact zeros (masked p) and
+    exact-1 rescales, so results are bit-identical whatever the batch-max
+    trip count — the batched engine and the batch-1 oracle can't drift.
+    """
+    b, hq, sq, d = q.shape
+    hkv, max_len = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
+    # bk need not divide max_len: the final block's slice start is clamped
+    # and its already-covered positions masked out (dynamic_slice can't
+    # overrun, and exactness survives because masked p is exactly 0)
+    bk = min(block_kv, max_len)
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+
+    k_cache = hint(k_cache, "batch", None, "seq_mp", None)
+    v_cache = hint(v_cache, "batch", None, "seq_mp", None)
+    q5 = q.reshape(b, hkv, rep, 1, d)
+    ks3 = None if k_scale is None else k_scale.reshape(b, hkv, max_len)
+    vs3 = None if v_scale is None else v_scale.reshape(b, hkv, max_len)
+
+    valid_len = jnp.clip(lengths, 0, max_len)
+    n_live = (jnp.max(valid_len) + bk - 1) // bk            # traced trip count
+    start = (jnp.int32(0) if window is None else
+             jnp.min(jnp.maximum(lengths - window, 0)) // bk)
+    pos_base = jnp.arange(bk)
+
+    def body(carry):
+        ib, m, l, acc = carry
+        block_start = ib * bk
+        off = jnp.minimum(block_start, max_len - bk)   # clamp final block
+        kb = jax.lax.dynamic_slice_in_dim(k_cache, off, bk, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v_cache, off, bk, axis=2)
+        ksb = None if ks3 is None else jax.lax.dynamic_slice_in_dim(
+            ks3, off, bk, axis=2)
+        vsb = None if vs3 is None else jax.lax.dynamic_slice_in_dim(
+            vs3, off, bk, axis=2)
+        pos = off + pos_base
+        # mask positions a clamped final block re-covers (pos < block_start)
+        valid = (pos[None, :] >= block_start) & \
+                (pos[None, :] < valid_len[:, None])
+        if window is not None:
+            valid &= pos[None, :] >= (lengths[:, None] - window)
+        mb, lb, accb = decode_softmax_partials(
+            q5, kb, vb, valid, scale=scale_v, k_scale=ksb, v_scale=vsb)
+        m_new = jnp.maximum(m, mb)
+        alpha = jnp.exp(m - m_new)
+        beta = jnp.exp(mb - m_new)
+        l_new = l * alpha + lb * beta
+        acc_new = acc * alpha[..., None] + accb * beta[..., None]
+        return ib + 1, m_new, l_new, acc_new
+
+    init = (start,
+            jnp.full((b, hkv, rep, 1), _NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, rep, 1), jnp.float32),
+            jnp.zeros((b, hkv, rep, 1, d), jnp.float32))
+    _, m, l, acc = jax.lax.while_loop(lambda c: c[0] < n_live, body, init)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
 
 
 def attention_chunked(
@@ -46,9 +175,10 @@ def attention_chunked(
     b, hq, sq, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     rep = hq // hkv
-    if rep > 1:
-        k = hint(jnp.repeat(k, rep, axis=1), "batch", "heads", None, None)
-        v = hint(jnp.repeat(v, rep, axis=1), "batch", "heads", None, None)
+    # GQA via grouped einsum — repeating K/V to hq heads would materialize
+    # rep x the cache bytes per layer (see decode_softmax_partials)
+    k = hint(k, "batch", "heads", None, None)
+    v = hint(v, "batch", "heads", None, None)
     q = hint(q, "batch", "heads", None, None)
     scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
     q_offset = skv - sq
@@ -66,10 +196,11 @@ def attention_chunked(
     n_q = q.shape[2] // cq
     n_k = k.shape[2] // ck
 
-    qf = q.astype(jnp.float32)
+    # GQA group packing: (b, hkv, rep, sq_padded, d)
+    qf = q.reshape(b, hkv, rep, q.shape[2], d).astype(jnp.float32)
 
     def q_chunk_out(iq: int) -> jax.Array:
-        q_blk = jax.lax.dynamic_slice_in_dim(qf, iq * cq, cq, axis=2)
+        q_blk = jax.lax.dynamic_slice_in_dim(qf, iq * cq, cq, axis=3)
         q_start = q_offset + iq * cq
         q_end = q_start + cq - 1
         # static chunk pruning (trace-time): causal upper bound, window lower
@@ -84,7 +215,7 @@ def attention_chunked(
             m, l, acc = carry
             k_blk = jax.lax.dynamic_slice_in_dim(k, ik * ck, ck, axis=2)
             v_blk = jax.lax.dynamic_slice_in_dim(v, ik * ck, ck, axis=2)
-            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk,
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk,
                            k_blk.astype(jnp.float32)) * scale_v
             q_pos = q_start + jnp.arange(cq)
             k_pos = ik * ck + jnp.arange(ck)
@@ -95,24 +226,25 @@ def attention_chunked(
                 mask &= (q_pos[:, None] - k_pos[None, :]) < window
             # mask out kv padding
             mask &= (k_pos < skv)[None, :]
-            s = jnp.where(mask[None, None], s, _NEG_INF)
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             alpha = jnp.exp(m - m_new)
             l_new = l * alpha + p.sum(axis=-1)
-            pv = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v_blk.dtype),
+            pv = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v_blk.dtype),
                             v_blk).astype(jnp.float32)
             acc_new = acc * alpha[..., None] + pv
             return (m_new, l_new, acc_new), None
 
         init = (
-            jnp.full((b, hq, cq), _NEG_INF, jnp.float32),
-            jnp.zeros((b, hq, cq), jnp.float32),
-            jnp.zeros((b, hq, cq, d), jnp.float32),
+            jnp.full((b, hkv, rep, cq), _NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, rep, cq), jnp.float32),
+            jnp.zeros((b, hkv, rep, cq, d), jnp.float32),
         )
         (m, l, acc), _ = jax.lax.scan(body, init, idxs)
         l = jnp.where(l == 0, 1.0, l)
-        return (acc / l[..., None]).astype(q.dtype)
+        out = (acc / l[..., None]).astype(q.dtype)
+        return out.reshape(b, hq, cq, d)
 
     outs = [q_chunk_out(i) for i in range(n_q)]
     out = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=2)

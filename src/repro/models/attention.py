@@ -7,8 +7,6 @@ a preallocated MAX-token cache (the paper's static-address trick, §IV-B).
 
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -188,7 +186,9 @@ def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
         attn_len = lengths
         attn_window = cfg.window
     if cfg.kv_quant == "int8":
-        # fallback (unsharded) path: quantized write + dequantized attention
+        # unsharded path: quantized write + FUSED dequant attention — the
+        # int8 cache and its scales go straight into ops.decode_attention,
+        # which rescales partial sums in-kernel (no full-precision copy)
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
         if lengths.ndim == 0:
@@ -212,10 +212,10 @@ def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
                 "k_scale": jax.vmap(upd)(cache["k_scale"], ks, write_idx),
                 "v_scale": jax.vmap(upd)(cache["v_scale"], vs, write_idx),
             }
-        k_full = dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
-        v_full = dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
-        o = ops.decode_attention(q, k_full, v_full, attn_len,
-                                 window=attn_window)
+        o = ops.decode_attention(q, new_cache["k"], new_cache["v"], attn_len,
+                                 window=attn_window,
+                                 k_scale=new_cache["k_scale"],
+                                 v_scale=new_cache["v_scale"])
         o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
         out = linear(o, p["wo"], use_kernels=cfg.use_kernels)
         return out, new_cache

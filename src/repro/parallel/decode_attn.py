@@ -20,16 +20,12 @@ Numerically identical to ``ref.decode_attention_ref`` (tested).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.parallel.compat import shard_map
-
-_NEG = -1e30
 
 
 def seq_axes_for(mesh: Mesh, batch: int) -> tuple[str, ...]:
@@ -91,42 +87,24 @@ def decode_attention_sharded(
             ck2, cv2 = upd(ck, kn), upd(cv, vn)
             ksc2 = vsc2 = None
 
-        # partial attention over the local slice.  Two traffic rules
-        # (measured on qwen3 decode, §Perf): (1) keep the cache in its
-        # storage dtype — an explicit .astype(f32) materializes a full f32
-        # cache copy per layer; preferred_element_type converts in-flight;
-        # (2) GQA via grouped einsum, NOT jnp.repeat — repeating K/V to 32
-        # heads materializes rep x the cache bytes.
+        # partial attention over the local slice, via the SAME inner kernel
+        # as the single-host blocked path (kernels/xla_attention).  Its two
+        # traffic rules (measured on qwen3 decode, §Perf): (1) the cache
+        # stays in its storage dtype — an explicit .astype(f32) materializes
+        # a full f32 cache copy per layer; (2) GQA via grouped einsum, NOT
+        # jnp.repeat — repeating K/V to 32 heads materializes rep x the
+        # cache bytes.  int8 KV: scale-after-dot (the paper's Stage-3 trick
+        # applied to the dynamic operand): logits_s = (q·k_q_s)·kscale_s.
+        from repro.kernels.xla_attention import decode_softmax_partials
         bl = q_l.shape[0]                                    # local batch
-        if quant:
-            # int8 KV: scale-after-dot (the paper's Stage-3 trick applied
-            # to the dynamic operand): logits_s = (q·k_q_s)·kscale_s
-            kmat = ck2.astype(q_l.dtype)
-            q5 = q_l.reshape(bl, hkv, rep, 1, hd)
-            logits = jnp.einsum("bgrqd,bgkd->bgrqk", q5, kmat,
-                                preferred_element_type=jnp.float32)
-            logits = logits * ksc2[:, :, None, None, :, 0] * scale_v
-        else:
-            q5 = q_l.reshape(bl, hkv, rep, 1, hd).astype(ck2.dtype)
-            logits = jnp.einsum("bgrqd,bgkd->bgrqk", q5, ck2,
-                                preferred_element_type=jnp.float32) * scale_v
+        q5 = q_l.reshape(bl, hkv, rep, 1, hd)
         pos = off + jnp.arange(s_loc)
         valid_len = jnp.minimum(length, S) if rolling else length
-        valid = pos < valid_len
-        logits = jnp.where(valid[None, None, None, None, :], logits, _NEG)
-
-        m_loc = jnp.max(logits, axis=-1)                     # (b,g,r,1)
-        p = jnp.exp(logits - m_loc[..., None])
-        p = jnp.where(valid[None, None, None, None, :], p, 0.0)
-        l_loc = p.sum(axis=-1)
-        if quant:
-            # fold vscale into the probabilities (linear in v)
-            pv = (p * vsc2[:, :, None, None, :, 0]).astype(q_l.dtype)
-            acc = jnp.einsum("bgrqk,bgkd->bgrqd", pv, cv2.astype(q_l.dtype),
-                             preferred_element_type=jnp.float32)
-        else:
-            acc = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(cv2.dtype), cv2,
-                             preferred_element_type=jnp.float32)
+        valid = jnp.broadcast_to((pos < valid_len)[None], (bl, s_loc))
+        m_loc, l_loc, acc = decode_softmax_partials(
+            q5, ck2, cv2, valid, scale=scale_v,
+            k_scale=ksc2[..., 0] if quant else None,
+            v_scale=vsc2[..., 0] if quant else None)
 
         # flash-decoding merge across sequence shards
         m_g = jax.lax.pmax(m_loc, sa)
