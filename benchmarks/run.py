@@ -27,13 +27,15 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated module substrings")
     ap.add_argument("--smoke", action="store_true",
-                    help="decode perf smoke -> BENCH_decode.json, then exit "
-                         "(the CI trend record)")
+                    help="perf smoke -> BENCH_decode.json + BENCH_serving.json"
+                         ", then exit (the CI trend records)")
     args = ap.parse_args()
 
     if args.smoke:
         from benchmarks.decode_bench import run_smoke
+        from benchmarks.serving_bench import run_smoke as serving_smoke
         run_smoke()
+        serving_smoke()
         return
 
     selected = MODULES

@@ -1,53 +1,81 @@
-"""Serving throughput benchmark: batched continuous decode vs the seed's
-per-request loop.
+"""Serving benchmark: chunked-prefill mixed batching vs stall-prefill, and
+batched continuous decode vs the seed's per-request loop.
 
-Measures decode tokens/s as a function of slot-batch size and queue depth.
-The baseline is the seed engine's inner loop (one batch-1 jitted
-``decode_step`` per live request per step, ``reference_decode``); the
-contender is the slot-based ``Engine`` (ONE jitted decode over all B slots
-per step).  Both share the bucketed prefill contract, so the delta isolates
-the scheduler + dispatch win — the JAX restatement of EdgeLLM Fig. 9's
-"keep the accelerator saturated" pipeline.
+Two cuts:
 
-Run:  PYTHONPATH=src python benchmarks/serving_bench.py [--batches 1,2,4]
+* **Throughput** (``--mode throughput``): decode tokens/s as a function of
+  slot-batch size and queue depth — the slot engine's ONE dispatch per tick
+  vs the seed's per-request batch-1 loop (``reference_decode``).
+
+* **Mixed load** (``--mode mixed``, the default): a resident decode load
+  plus a burst of prompt admissions, measured under two admission policies
+  of the SAME engine:
+
+  - ``stall``  — the seed's schedule: while any prompt is mid-prefill only
+    it advances; decode rows stall (head-of-line blocking), and queued
+    prompts serialize behind it.
+  - ``mixed``  — chunked-prefill admission fused into the decode tick
+    (Sarathi-style): every mid-prefill row advances one chunk bucket per
+    tick WHILE decode rows keep emitting, and multiple admissions chunk
+    together in one dispatch.
+
+  Reported: TTFT p50/p99 over the admission burst, inter-token latency p99
+  over the resident decoders, decode tokens/s.  Both policies share one
+  compile cache, so the delta isolates the schedule — the serving analogue
+  of EdgeLLM keeping the FPGA saturated with one fixed executable set.
+
+``--smoke`` writes BENCH_serving.json (the CI trend record, uploaded next
+to BENCH_decode.json).
+
+Run:  PYTHONPATH=src python benchmarks/serving_bench.py [--mode mixed]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.core.compiler import CompileCache, quantize_model
+from repro.core.compiler import CompileCache, TokenBuckets, quantize_model
 from repro.models import api
-from repro.serving.engine import Engine, Request, reference_decode
+from repro.serving.engine import Engine, Request
 
 
-def _workload(cfg, n_requests: int, max_new: int, seed: int = 0):
+def _workload(cfg, n_requests: int, max_new: int, seed: int = 0,
+              lo: int = 4, hi: int = 28):
     rng = np.random.default_rng(seed)
     return [
-        (rng.integers(0, cfg.vocab_size, int(rng.integers(4, 28))).astype(np.int32),
-         max_new)
+        (rng.integers(0, cfg.vocab_size,
+                      int(rng.integers(lo, hi))).astype(np.int32), max_new)
         for _ in range(n_requests)
     ]
 
 
-def bench_batched(cfg, params, workload, batch: int, max_len: int):
+# ---------------------------------------------------------------------------
+# throughput mode (batched engine vs per-request loop)
+# ---------------------------------------------------------------------------
+
+def bench_batched(cfg, params, workload, batch: int, max_len: int,
+                  chunk_size: int = 16):
     """Slot engine: timed after a warmup run compiles the executable set."""
     def submit_all(engine):
         for rid, (prompt, max_new) in enumerate(workload):
             engine.submit(Request(rid=rid, prompt=prompt,
                                   max_new_tokens=max_new))
 
-    warm = Engine(cfg, params, batch_size=batch, max_len=max_len)
+    warm = Engine(cfg, params, batch_size=batch, max_len=max_len,
+                  chunk_size=chunk_size)
     submit_all(warm)
     warm.run()
 
     engine = Engine(cfg, params, batch_size=batch, max_len=max_len,
-                    compile_cache=warm.cache_compiles)  # same (cfg, max_len)
+                    chunk_size=chunk_size,
+                    compile_cache=warm.cache_compiles)  # same (cfg, shapes)
     submit_all(engine)
     t0 = time.perf_counter()
     done = engine.run()
@@ -61,24 +89,134 @@ def bench_batched(cfg, params, workload, batch: int, max_len: int):
     }
 
 
+def _seed_decode(cfg, params, prompt, max_new_tokens, *, max_len, cc):
+    """The seed engine's inner loop: ONE bucketed batch-1 prefill + greedy
+    decode.  Kept as the throughput baseline so BENCH trend numbers stay
+    comparable across PRs — ``reference_decode`` is now the exact
+    teacher-forced ORACLE (O(len) dispatches) and would overstate the
+    batched engine's speedup if timed as the baseline."""
+    buckets = TokenBuckets(max_tokens=max_len)
+    bucket = buckets.bucket(len(prompt))
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, -len(prompt):] = prompt
+    pf = cc.get("base_prefill", bucket, lambda: jax.jit(
+        lambda p, b: api.prefill(cfg, p, b, max_len)))
+    logits, cache = pf(params, {"tokens": jnp.asarray(padded)})
+    out = [int(np.argmax(np.asarray(logits[0])))]
+    dec = cc.get("base_decode", 1, lambda: jax.jit(
+        lambda p, c, t, l: api.decode_step(cfg, p, c, t, l)))
+    length = bucket
+    while len(out) < max_new_tokens and length < max_len:
+        length += 1
+        logits, cache = dec(params, cache,
+                            jnp.asarray([[out[-1]]], jnp.int32),
+                            jnp.asarray([length], jnp.int32))
+        out.append(int(np.argmax(np.asarray(logits[0]))))
+    return out
+
+
 def bench_per_request(cfg, params, workload, max_len: int):
     """Seed baseline: sequential batch-1 greedy loops (shared compile cache)."""
     cc = CompileCache()
     for prompt, max_new in workload:                  # warm/compile pass
-        reference_decode(cfg, params, prompt, max_new, max_len=max_len,
-                         compile_cache=cc)
+        _seed_decode(cfg, params, prompt, max_new, max_len=max_len, cc=cc)
     t0 = time.perf_counter()
     tokens = 0
     for prompt, max_new in workload:
-        out = reference_decode(cfg, params, prompt, max_new, max_len=max_len,
-                               compile_cache=cc)
+        out = _seed_decode(cfg, params, prompt, max_new, max_len=max_len,
+                           cc=cc)
         tokens += len(out) - 1
     dt = time.perf_counter() - t0
     return {"tokens": tokens, "tokens_per_s": tokens / dt}
 
 
+# ---------------------------------------------------------------------------
+# mixed-load mode (chunked admission vs stall-prefill)
+# ---------------------------------------------------------------------------
+
+def _mixed_workload(cfg, *, residents: int, burst: int, max_len: int,
+                    seed: int = 0):
+    """Resident decoders (short prompt, long generation) + an admission
+    burst of long prompts arriving mid-decode."""
+    rng = np.random.default_rng(seed)
+    res = [Request(rid=i,
+                   prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                   max_new_tokens=48)
+           for i in range(residents)]
+    prompt_len = max(8, int(max_len * 0.6))
+    bur = [Request(rid=100 + i,
+                   prompt=rng.integers(0, cfg.vocab_size,
+                                       prompt_len).astype(np.int32),
+                   max_new_tokens=4)
+           for i in range(burst)]
+    return res, bur
+
+
+def bench_mixed_load(cfg, params, *, policy: str, batch: int, max_len: int,
+                     chunk_size: int, burst: int,
+                     compile_cache: CompileCache | None = None):
+    """One mixed-load trial; returns latency metrics + the compile cache."""
+    engine = Engine(cfg, params, batch_size=batch, max_len=max_len,
+                    chunk_size=chunk_size, prefill_policy=policy,
+                    compile_cache=compile_cache)
+    # residents on half the slots; the burst admits into the free half WHILE
+    # they decode — that concurrency is exactly what the two policies differ on
+    residents, burst_reqs = _mixed_workload(
+        cfg, residents=max(1, batch // 2), burst=burst, max_len=max_len)
+    for r in residents:
+        engine.submit(r)
+    engine.run(max_steps=4)          # residents admitted + decoding
+    for r in burst_reqs:             # the burst arrives mid-decode
+        engine.submit(r)
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+
+    ttft = [r.first_token_at - r.submitted_at for r in burst_reqs]
+    itl = [d for r in residents for d in np.diff(r.token_times).tolist()]
+    tokens = sum(len(r.output) - 1 for r in residents + burst_reqs)
+    return {
+        "policy": policy,
+        "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+        "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
+        "itl_p50_ms": float(np.percentile(itl, 50) * 1e3),
+        "itl_p99_ms": float(np.percentile(itl, 99) * 1e3),
+        "decode_tokens_per_s": tokens / dt,
+        "steps": engine.steps,
+        "mixed_ticks": engine.mixed_ticks,
+        "compile_misses": engine.cache_compiles.misses,
+        "compile_budget": engine.compile_budget,
+    }, engine.cache_compiles
+
+
+def run_mixed(cfg, params, *, batch: int = 4, max_len: int = 128,
+              chunk_size: int = 16, burst: int = 6) -> dict:
+    """Warm both policies on a shared compile cache, then measure each."""
+    _, cc = bench_mixed_load(cfg, params, policy="mixed", batch=batch,
+                             max_len=max_len, chunk_size=chunk_size,
+                             burst=burst)                       # warm/compile
+    stall, cc = bench_mixed_load(cfg, params, policy="stall", batch=batch,
+                                 max_len=max_len, chunk_size=chunk_size,
+                                 burst=burst, compile_cache=cc)
+    mixed, cc = bench_mixed_load(cfg, params, policy="mixed", batch=batch,
+                                 max_len=max_len, chunk_size=chunk_size,
+                                 burst=burst, compile_cache=cc)
+    return {
+        "config": {"arch": cfg.name, "batch": batch, "max_len": max_len,
+                   "chunk_size": chunk_size, "burst": burst},
+        "stall_prefill": stall,
+        "mixed": mixed,
+        "ttft_p99_speedup": stall["ttft_p99_ms"] / mixed["ttft_p99_ms"],
+        "itl_p99_speedup": stall["itl_p99_ms"] / mixed["itl_p99_ms"],
+    }
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
 def rows() -> list[tuple[str, float, str]]:
-    """benchmarks.run driver entry: us/token at queue=6 for both modes."""
+    """benchmarks.run driver entry: us/token + mixed-load latency cut."""
     cfg = get_smoke_config("qwen-7b", d_model=128, d_ff=256, vocab_size=512)
     params = quantize_model(api.init_params(cfg, jax.random.PRNGKey(0)),
                             "dense")
@@ -90,6 +228,7 @@ def rows() -> list[tuple[str, float, str]]:
     cfg_q = get_smoke_config("qwen-7b", d_model=128, d_ff=256, vocab_size=512,
                              kv_quant="int8")
     batched_q = bench_batched(cfg_q, params, workload, batch=4, max_len=64)
+    mixed = run_mixed(cfg, params)
     return [
         ("serving/per_request_tok", 1e6 / base["tokens_per_s"],
          f"tok_s={base['tokens_per_s']:.1f}"),
@@ -100,26 +239,74 @@ def rows() -> list[tuple[str, float, str]]:
         ("serving/batched_b4_int8kv_tok", 1e6 / batched_q["tokens_per_s"],
          f"tok_s={batched_q['tokens_per_s']:.1f} "
          f"occup={batched_q['occupancy']:.2f}"),
+        ("serving/mixed_ttft_p99_us", mixed["mixed"]["ttft_p99_ms"] * 1e3,
+         f"vs_stall={mixed['ttft_p99_speedup']:.2f}x"),
+        ("serving/mixed_itl_p99_us", mixed["mixed"]["itl_p99_ms"] * 1e3,
+         f"vs_stall={mixed['itl_p99_speedup']:.2f}x"),
     ]
+
+
+def run_smoke(path: str = "BENCH_serving.json") -> dict:
+    """CI trend record: mixed-load latency, chunked vs stall-prefill."""
+    cfg = get_smoke_config("qwen-7b", d_model=128, d_ff=256, vocab_size=512)
+    params = quantize_model(api.init_params(cfg, jax.random.PRNGKey(0)),
+                            "dense")
+    record = run_mixed(cfg, params)
+    workload = _workload(cfg, 6, 8)
+    base = bench_per_request(cfg, params, workload, max_len=64)
+    batched = bench_batched(cfg, params, workload, batch=4, max_len=64)
+    record["decode_tokens_per_s"] = {
+        "per_request": base["tokens_per_s"],
+        "batched_b4": batched["tokens_per_s"],
+    }
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    print(json.dumps(record, indent=2, sort_keys=True))
+    return record
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="mixed", choices=["mixed", "throughput"])
     ap.add_argument("--arch", default="qwen-7b")
     ap.add_argument("--batches", default="1,2,4,8")
     ap.add_argument("--queue-depths", default="8,16")
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk-size", type=int, default=16)
+    ap.add_argument("--burst", type=int, default=6)
     ap.add_argument("--quantize", default="dense")
     ap.add_argument("--kv-quant", default="none", choices=["none", "int8"],
                     help="int8 = fused-dequant decode path end to end")
+    ap.add_argument("--smoke", action="store_true",
+                    help="mixed-load latency smoke -> BENCH_serving.json")
     args = ap.parse_args()
+
+    if args.smoke:
+        run_smoke()
+        return
 
     cfg = get_smoke_config(args.arch, d_model=128, d_ff=256, vocab_size=512,
                            kv_quant=args.kv_quant)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     if args.quantize != "none":
         params = quantize_model(params, args.quantize)
+
+    if args.mode == "mixed":
+        rec = run_mixed(cfg, params, max_len=args.max_len,
+                        chunk_size=args.chunk_size, burst=args.burst)
+        print(f"arch={cfg.name} max_len={args.max_len} "
+              f"chunk={args.chunk_size} burst={args.burst}")
+        print(f"{'policy':>8} {'ttft_p50':>9} {'ttft_p99':>9} "
+              f"{'itl_p50':>9} {'itl_p99':>9} {'tok/s':>8}")
+        for key in ("stall_prefill", "mixed"):
+            r = rec[key]
+            print(f"{r['policy']:>8} {r['ttft_p50_ms']:>8.1f}m "
+                  f"{r['ttft_p99_ms']:>8.1f}m {r['itl_p50_ms']:>8.1f}m "
+                  f"{r['itl_p99_ms']:>8.1f}m {r['decode_tokens_per_s']:>8.1f}")
+        print(f"chunked admission: ttft_p99 {rec['ttft_p99_speedup']:.2f}x, "
+              f"itl_p99 {rec['itl_p99_speedup']:.2f}x vs stall-prefill")
+        return
 
     depths = [int(d) for d in args.queue_depths.split(",")]
     batches = [int(b) for b in args.batches.split(",")]
@@ -132,7 +319,8 @@ def main() -> None:
         print(f"{depth:>6} {'per-request':>14} {1:>6} "
               f"{base['tokens_per_s']:>9.1f} {base['tokens']:>6} {'-':>6}")
         for batch in batches:
-            r = bench_batched(cfg, params, workload, batch, args.max_len)
+            r = bench_batched(cfg, params, workload, batch, args.max_len,
+                              chunk_size=args.chunk_size)
             speedup = r["tokens_per_s"] / base["tokens_per_s"]
             print(f"{depth:>6} {'batched':>14} {batch:>6} "
                   f"{r['tokens_per_s']:>9.1f} {r['steps']:>6} "

@@ -33,8 +33,8 @@ def main() -> None:
     for r in sorted(done, key=lambda r: r.rid):
         print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.output[:8]}...")
     print("summary:", Engine.summarize(done))
-    print(f"scheduler: {engine.steps} batched steps "
-          f"({engine.decode_calls} decode dispatches), "
+    print(f"scheduler: {engine.steps} batched ticks "
+          f"({engine.dispatches} dispatches, {engine.mixed_ticks} mixed), "
           f"slot occupancy {engine.slot_occupancy:.2f}")
     print(f"compile cache: {len(engine.cache_compiles)} executables, "
           f"{engine.cache_compiles.hits} hits / "

@@ -192,17 +192,21 @@ class CompileCache:
     Serving uses three key families (the paper's pre-compiled executable
     set from Fig. 9, restated for XLA's static shapes):
 
-    * ``("prefill", bucket)`` — batch-1 prompt prefill, one per token-length
-      bucket (``TokenBuckets``);
-    * ``("decode", B)`` — THE batched decode step: one executable per
-      resident slot-batch size, shared by every request at every step;
+    * ``("mixed", W)`` — the mixed prefill/decode tick at chunk-width
+      bucket W (``TokenBuckets`` over the engine's chunk size): prompts
+      admit through the SAME dispatch that advances decode rows, so there
+      is no per-prompt-length prefill family at all;
+    * ``("decode", B)`` — the pure-decode tick: one executable per resident
+      slot-batch size, shared by every request at every step;
     * ``("insert", B)`` — the slot scatter behind ``insert_request`` /
       ``evict_slot`` (the slot index is a traced operand, so one executable
-      covers all B slots).
+      covers all B slots); audio engines add one ``("admit", F)`` encoder
+      executable per frame count.
 
-    Total serving executables are therefore bounded by ``n_buckets + 2``
-    per engine regardless of traffic — the JAX restatement of the paper's
-    "17 operators x B buckets" instruction-stream budget.
+    Total serving executables are therefore bounded by
+    ``n_chunk_buckets + 2`` per engine regardless of traffic — the JAX
+    restatement of the paper's "17 operators x B buckets"
+    instruction-stream budget.
     """
 
     def __init__(self):

@@ -10,8 +10,17 @@ quantized operand packed all the way into the PE array, rescaling partial
 sums afterwards.  This kernel is the TPU restatement of both:
 
 * **Grid** ``(B, hkv, MAX/bk)`` with the KV-block axis innermost
-  ("arbitrary").  ``lengths: (B,)`` rides in as a scalar-prefetch operand
-  (SMEM), so both the kernel body and the BlockSpec index maps can read it.
+  ("arbitrary").  ``lengths: (B,)`` and ``q_lens: (B,)`` ride in as
+  scalar-prefetch operands (SMEM), so both the kernel body and the BlockSpec
+  index maps can read them.
+
+* **Mixed q-block.**  The query block packs ``q_lens[b]`` live queries per
+  row (1 for a decoding row, C for a row mid-prefill), so one fixed
+  executable advances a mixed prefill/decode batch — the paper's "one data
+  shape for every operator" contract (§IV universal data parallelism)
+  applied to the serving tick.  Query j of row b sits at absolute position
+  ``lengths[b] - q_lens[b] + j``; intra-chunk causality is a per-position
+  mask, and dead queries (j >= q_lens[b]) end with ``l == 0`` -> zeros.
 
 * **Per-row block skipping.**  Blocks at or past row ``b``'s valid context
   are (1) skipped in compute via ``pl.when`` and (2) *elided in the DMA*:
@@ -21,9 +30,9 @@ sums afterwards.  This kernel is the TPU restatement of both:
   ``MAX/bk`` — the paper's "only the valid tokens travel" contract.
 
 * **GQA via query-group packing.**  The ``rep = hq/hkv`` query heads that
-  share one KV head are packed into a single ``(rep, d)`` q block, so each
-  KV byte is read once per *group*, never ``jnp.repeat``-ed into an
-  ``hq``-sized cache copy.
+  share one KV head are packed (together with the chunk axis) into a single
+  ``(rep*C, d)`` q block, so each KV byte is read once per *group*, never
+  ``jnp.repeat``-ed into an ``hq``-sized cache copy.
 
 * **Fused int8→fp dequant.**  With an int8 cache the kernel reads 1
   byte/value from HBM, does the integer-exact dot in bf16 (int8 values are
@@ -37,7 +46,7 @@ sums afterwards.  This kernel is the TPU restatement of both:
   is applied before caching and softmax is permutation-invariant, so the
   kernel just treats every slot below ``min(length, MAX)`` as valid (the
   caller clamps ``lengths``).  A non-rolling window additionally raises the
-  *first* live block to ``(length - window) // bk``.
+  *first* live block to the first block the earliest query's window reaches.
 
 * **(m, l, acc) in VMEM scratch.**  Softmax running stats and the output
   accumulator stay resident across the KV-block axis — the G-VSA
@@ -48,9 +57,9 @@ Roofline (per decode step, per layer): bytes ≈
 bytes/token for int8) vs the dense ref's ``B * MAX * d * hkv * elt * 2`` —
 at length 128 in a 2048-slot fp16 cache that is 16× fewer bytes, and int8
 halves the per-byte cost again while the seed's dequantize-everything path
-*tripled* it (int8 read + fp write + fp read).  FLOPs ≈ 4·len·d per (row,
-q-head): arithmetic intensity stays ≈1 FLOP/byte either way — decode is
-bandwidth-bound, so bytes saved convert 1:1 into step time.
+*tripled* it (int8 read + fp write + fp read).  A C-token chunk amortizes
+the same KV stream over C queries — chunked prefill is the compute-bound
+counterpart riding the identical pipeline.
 """
 
 from __future__ import annotations
@@ -64,7 +73,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import CompilerParams, default_interpret
 
-__all__ = ["decode_flash_attention_pallas", "kv_block_size", "DEFAULT_BLOCK_KV"]
+__all__ = [
+    "decode_flash_attention_pallas",
+    "mixed_flash_attention_pallas",
+    "kv_block_size",
+    "DEFAULT_BLOCK_KV",
+]
 
 _NEG_INF = -1e30
 _STATS = 128  # lane-replicated softmax statistics width
@@ -79,8 +93,8 @@ def kv_block_size(max_len: int, block_kv: int) -> int:
     return bk
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, *rest, scale, window, bk, max_len,
-            rep, quant):
+def _kernel(len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest, scale, window, bk,
+            max_len, rep, chunk, quant):
     if quant:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -95,34 +109,43 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, *rest, scale, window, bk, max_len,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    length = len_ref[b]
+    length = len_ref[b]           # total valid context incl. this step's chunk
+    qlen = qlen_ref[b]            # live queries this step (1 = plain decode)
     valid_len = jnp.clip(length, 1, max_len)
     k_start = ik * bk
     live = k_start < valid_len
     if window is not None:
-        live = jnp.logical_and(live, k_start + bk > length - window)
+        # earliest query position is length - qlen; its window floor is
+        # (length - qlen) - window + 1
+        live = jnp.logical_and(
+            live, k_start + bk > length - qlen - window + 1)
 
     @pl.when(live)
     def _step():
-        q = q_ref[0, 0]                                    # (rep, d)
+        q = q_ref[0, 0]                                    # (rep*chunk, d)
         k = k_ref[0, 0]                                    # (bk, d)
         s = jax.lax.dot_general(
             q, k.astype(q.dtype),
             dimension_numbers=(((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)            # (rep, bk)
+            preferred_element_type=jnp.float32)            # (rep*chunk, bk)
         if quant:
             # scale-after-dot: the int8 dot is integer-exact in bf16; the
             # per-token fp scale multiplies the finished partial sum
             s = s * ks_ref[0, 0][None, :]
         s = s * scale
 
-        pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (rep, bk), 1)
-        valid = pos < jnp.minimum(length, max_len)
+        rows = rep * chunk
+        pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (rows, bk), 1)
+        j = jax.lax.broadcasted_iota(jnp.int32, (rows, bk), 0) % chunk
+        q_pos = length - qlen + j                           # per-query position
+        valid = jnp.logical_and(pos < jnp.minimum(length, max_len),
+                                pos <= q_pos)               # intra-chunk causal
+        valid = jnp.logical_and(valid, j < qlen)            # dead query rows
         if window is not None:
-            valid = jnp.logical_and(valid, pos >= length - window)
+            valid = jnp.logical_and(valid, pos > q_pos - window)
         s = jnp.where(valid, s, _NEG_INF)
 
-        m_prev = m_ref[:, :1]                              # (rep, 1)
+        m_prev = m_ref[:, :1]                              # (rows, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new)
@@ -135,7 +158,7 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, *rest, scale, window, bk, max_len,
         pv = jax.lax.dot_general(
             p.astype(q.dtype), v_ref[0, 0].astype(q.dtype),
             dimension_numbers=(((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)            # (rep, d)
+            preferred_element_type=jnp.float32)            # (rows, d)
         acc_ref[...] = acc_ref[...] * alpha + pv
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
@@ -150,11 +173,12 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, *rest, scale, window, bk, max_len,
 @functools.partial(
     jax.jit,
     static_argnames=("window", "scale", "block_kv", "interpret"))
-def decode_flash_attention_pallas(
+def mixed_flash_attention_pallas(
     q: jax.Array,
     k_cache: jax.Array,
     v_cache: jax.Array,
     lengths: jax.Array,
+    q_lens: jax.Array,
     *,
     window: int | None = None,
     scale: float | None = None,
@@ -163,23 +187,24 @@ def decode_flash_attention_pallas(
     block_kv: int = DEFAULT_BLOCK_KV,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """One-token batched decode attention.
+    """Mixed prefill/decode batched attention (chunk q-block).
 
-    ``q`` (B, hq, 1, d); caches (B, hkv, MAX, d) in fp or int8 (with
-    ``k_scale``/``v_scale`` (B, hkv, MAX, 1) f32); ``lengths`` scalar or
-    (B,) = per-row valid context *including* the new token.  Rolling-SWA
-    callers pass ``lengths`` pre-clamped to the buffer size and
-    ``window=None``.  Returns (B, hq, 1, d) in q.dtype.
+    ``q`` (B, hq, C, d); caches (B, hkv, MAX, d) in fp or int8 (with
+    ``k_scale``/``v_scale`` (B, hkv, MAX, 1) f32); ``lengths`` (B,) =
+    per-row valid context *including* this step's chunk; ``q_lens`` (B,) =
+    live queries per row (1 = decoding row, up to C = mid-prefill row; the
+    padding queries return zeros).  Rolling-SWA callers pass ``lengths``
+    pre-clamped to the buffer size and ``window=None``.  Returns
+    (B, hq, C, d) in q.dtype.
     """
     if interpret is None:
         interpret = default_interpret()
-    b, hq, sq, d = q.shape
-    if sq != 1:
-        raise ValueError(f"decode kernel is single-token (sq={sq})")
+    b, hq, chunk, d = q.shape
     hkv, max_len = k_cache.shape[1], k_cache.shape[2]
     if hq % hkv:
         raise ValueError(f"hq={hq} not a multiple of hkv={hkv}")
     rep = hq // hkv
+    rows = rep * chunk
     quant = k_scale is not None
     scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
     bk = kv_block_size(max_len, block_kv)
@@ -187,9 +212,12 @@ def decode_flash_attention_pallas(
 
     lengths = jnp.broadcast_to(
         jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
-    q4 = q.reshape(b, hkv, rep, d)
+    q_lens = jnp.broadcast_to(
+        jnp.asarray(q_lens, jnp.int32).reshape(-1), (b,))
+    # (B, hq, C, d) -> (B, hkv, rep*C, d): row r*C + j is (group head r, query j)
+    q4 = q.reshape(b, hkv, rep, chunk, d).reshape(b, hkv, rows, d)
 
-    def kv_map(ib, h, ik, len_ref):
+    def kv_map(ib, h, ik, len_ref, qlen_ref):
         # clamp into the row's live block range: steps outside it revisit an
         # already-resident block, so Mosaic issues no DMA for them
         vl = jnp.clip(len_ref[ib], 1, max_len)
@@ -197,15 +225,18 @@ def decode_flash_attention_pallas(
         if window is None:
             first = 0
         else:
-            first = jnp.minimum(
-                jnp.maximum((len_ref[ib] - window) // bk, 0), last)
+            first = jnp.minimum(jnp.maximum(
+                (len_ref[ib] - qlen_ref[ib] - window + 1) // bk, 0), last)
         return (ib, h, jnp.clip(ik, first, last), 0)
 
-    def kv_scale_map(ib, h, ik, len_ref):
-        return kv_map(ib, h, ik, len_ref)[:3]
+    def kv_scale_map(ib, h, ik, len_ref, qlen_ref):
+        return kv_map(ib, h, ik, len_ref, qlen_ref)[:3]
+
+    def q_map(ib, h, ik, len_ref, qlen_ref):
+        return (ib, h, 0, 0)
 
     in_specs = [
-        pl.BlockSpec((1, 1, rep, d), lambda ib, h, ik, len_ref: (ib, h, 0, 0)),
+        pl.BlockSpec((1, 1, rows, d), q_map),
         pl.BlockSpec((1, 1, bk, d), kv_map),
         pl.BlockSpec((1, 1, bk, d), kv_map),
     ]
@@ -222,26 +253,56 @@ def decode_flash_attention_pallas(
 
     kernel = functools.partial(
         _kernel, scale=scale_v, window=window, bk=bk, max_len=max_len,
-        rep=rep, quant=quant)
+        rep=rep, chunk=chunk, quant=quant)
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=(b, hkv, n_blocks),
             in_specs=in_specs,
-            out_specs=pl.BlockSpec(
-                (1, 1, rep, d), lambda ib, h, ik, len_ref: (ib, h, 0, 0)),
+            out_specs=pl.BlockSpec((1, 1, rows, d), q_map),
             scratch_shapes=[
-                pltpu.VMEM((rep, _STATS), jnp.float32),
-                pltpu.VMEM((rep, _STATS), jnp.float32),
-                pltpu.VMEM((rep, d), jnp.float32),
+                pltpu.VMEM((rows, _STATS), jnp.float32),
+                pltpu.VMEM((rows, _STATS), jnp.float32),
+                pltpu.VMEM((rows, d), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, rep, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, d), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(lengths, *operands)
-    return out.reshape(b, hq, 1, d)
+    )(lengths, q_lens, *operands)
+    return out.reshape(b, hkv, rep, chunk, d).reshape(b, hq, chunk, d)
+
+
+def decode_flash_attention_pallas(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One-token batched decode attention: the chunk=1 specialization.
+
+    ``q`` (B, hq, 1, d); caches (B, hkv, MAX, d) in fp or int8 (with
+    ``k_scale``/``v_scale`` (B, hkv, MAX, 1) f32); ``lengths`` scalar or
+    (B,) = per-row valid context *including* the new token.  Rolling-SWA
+    callers pass ``lengths`` pre-clamped to the buffer size and
+    ``window=None``.  Returns (B, hq, 1, d) in q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    if sq != 1:
+        raise ValueError(f"decode kernel is single-token (sq={sq}); use "
+                         "mixed_flash_attention_pallas for chunked queries")
+    return mixed_flash_attention_pallas(
+        q, k_cache, v_cache, lengths, jnp.ones((b,), jnp.int32),
+        window=window, scale=scale, k_scale=k_scale, v_scale=v_scale,
+        block_kv=block_kv, interpret=interpret)

@@ -26,7 +26,8 @@ from repro.kernels.pallas_compat import default_interpret
 from repro.kernels.sparse_w4a16 import sparse_w4a16_matmul_pallas
 from repro.kernels.w4a16_matmul import w4a16_matmul_pallas
 
-__all__ = ["w4a16_matmul", "sparse_w4a16_matmul", "attention", "decode_attention"]
+__all__ = ["w4a16_matmul", "sparse_w4a16_matmul", "attention",
+           "decode_attention", "mixed_attention"]
 
 # one backend probe for the whole package: the kernels resolve their
 # interpret=None default through the same (cached) function
@@ -154,4 +155,57 @@ def decode_attention(
             v_full = dequantize_kv(v_cache, v_scale, q.dtype)
         return _ref.decode_attention_ref(
             q, k_full, v_full, length, window=window, scale=scale)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def mixed_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    q_lens: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Mixed prefill/decode attention against a preallocated KV cache.
+
+    The chunked generalization of ``decode_attention``: q (b, hq, C, d)
+    carries ``q_lens[b]`` live queries per row (1 = a decoding row, up to C
+    = a row mid-prefill), ``lengths`` (b,) is the valid context *including*
+    this step's chunk, and intra-chunk causality is masked per query — one
+    dispatch advances a mixed batch (the serving tick's shape contract).
+
+    * ``impl="pallas"`` — the flash-decoding kernel with a chunk q-block:
+      per-row KV-block skipping, the chunk rides the same DMA pipeline.
+    * ``impl="xla"``    — the length-blocked twin (``mixed_attention_blocked``),
+      sharing its block walker with the decode path.
+    * ``impl="ref"``    — the dense full-cache oracle.
+    """
+    if impl == "auto":
+        impl = "pallas" if _ON_TPU else "xla"
+    if impl == "pallas":
+        from repro.kernels.decode_flash import (
+            DEFAULT_BLOCK_KV, kv_block_size, mixed_flash_attention_pallas)
+        if kv_block_size(k_cache.shape[2], DEFAULT_BLOCK_KV) >= 8:
+            return mixed_flash_attention_pallas(
+                q, k_cache, v_cache, lengths, q_lens, window=window,
+                scale=scale, k_scale=k_scale, v_scale=v_scale)
+        impl = "xla"  # cache length tiles too poorly for the kernel
+    if impl == "xla":
+        from repro.kernels.xla_attention import mixed_attention_blocked
+        return mixed_attention_blocked(
+            q, k_cache, v_cache, lengths, q_lens, window=window, scale=scale,
+            k_scale=k_scale, v_scale=v_scale)
+    if impl == "ref":
+        k_full, v_full = k_cache, v_cache
+        if k_scale is not None:
+            from repro.models.attention import dequantize_kv
+            k_full = dequantize_kv(k_cache, k_scale, q.dtype)
+            v_full = dequantize_kv(v_cache, v_scale, q.dtype)
+        return _ref.mixed_attention_ref(
+            q, k_full, v_full, lengths, q_lens, window=window, scale=scale)
     raise ValueError(f"unknown impl {impl!r}")

@@ -19,6 +19,7 @@ __all__ = [
     "sparse_w4a16_matmul_ref",
     "attention_ref",
     "decode_attention_ref",
+    "mixed_attention_ref",
 ]
 
 
@@ -162,3 +163,50 @@ def decode_attention_ref(
                      probs.astype(q.dtype).astype(jnp.float32),
                      v.astype(jnp.float32))
     return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+def mixed_attention_ref(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    q_lens: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Mixed prefill/decode attention oracle (chunked q against the cache).
+
+    q (b, hq, C, d); caches (b, hkv, max_len, d); ``lengths`` (b,) = valid
+    context per row INCLUDING this step's chunk; ``q_lens`` (b,) = live
+    queries per row (query j sits at position ``lengths - q_lens + j``;
+    dead queries j >= q_lens return exact zeros).
+    """
+    b, hq, c, d = q.shape
+    hkv, max_len = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+    q_lens = jnp.broadcast_to(jnp.asarray(q_lens, jnp.int32).reshape(-1), (b,))
+    qg = q.reshape(b, hkv, rep, c, d)
+    logits = jnp.einsum("bgrqd,bgkd->bgrqk", qg.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(max_len)
+    j = jnp.arange(c)
+    q_pos = (lengths - q_lens)[:, None] + j[None, :]                  # (b, c)
+    valid = (pos[None, None, :] < jnp.minimum(lengths, max_len)[:, None, None])
+    valid &= pos[None, None, :] <= q_pos[:, :, None]                  # causal
+    valid &= (j[None, :] < q_lens[:, None])[..., None]                # dead q
+    if window is not None:
+        valid &= pos[None, None, :] > q_pos[:, :, None] - window
+    logits = jnp.where(valid[:, None, None], logits, -jnp.inf)
+    # dead queries are all -inf rows: normalize against a safe l, return 0
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - jnp.maximum(m, -1e30))
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    probs = p / jnp.where(l == 0, 1.0, l)
+    out = jnp.einsum("bgrqk,bgkd->bgrqd",
+                     probs.astype(q.dtype).astype(jnp.float32),
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, c, d).astype(q.dtype)

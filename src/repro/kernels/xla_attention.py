@@ -22,10 +22,14 @@ the same (m, l, acc) recurrence over KV blocks of a preallocated MAX-token
 cache, but with a ``lax.while_loop`` whose trip count is
 ``ceil(max(lengths)/bk)`` — compute scales with the *actual* batched context
 instead of MAX (the Pallas kernel in ``decode_flash.py`` additionally skips
-per-row).  Its per-block inner, ``decode_softmax_partials``, is shared with
-the shard_map path (``parallel/decode_attn.py``): one numerics contract —
-grouped-einsum GQA (never ``jnp.repeat`` of the cache) and int8-KV
-scale-after-dot — on every decode path.
+per-row).  ``mixed_attention_blocked`` is the chunked-prefill generalization
+of the same loop: per-row ``q_lens`` queries per step (1 for decoding rows,
+C for rows mid-prefill) with intra-chunk causal masking, so one dispatch
+advances a mixed prefill/decode batch.  Both run on the shared block walker
+``decode_blocked_partials``; its per-block inner, ``decode_softmax_partials``,
+is shared with the shard_map path (``parallel/decode_attn.py``): one
+numerics contract — grouped-einsum GQA (never ``jnp.repeat`` of the cache)
+and int8-KV scale-after-dot — on every decode path.
 """
 
 from __future__ import annotations
@@ -51,13 +55,18 @@ def decode_softmax_partials(
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Flash-decoding partial stats over one KV slice.
 
-    ``q5`` (b, g, r, 1, d) — GQA query group packed per KV head; ``k``/``v``
-    (b, g, t, d) in fp or int8; ``valid`` (b, t) bool; ``k_scale``/``v_scale``
-    (b, g, t) f32 for int8 KV (scale-after-dot, Fig. 4 Stage-3).  Returns
-    ``(m, l, acc)`` of shapes (b,g,r,1), (b,g,r,1), (b,g,r,1,d) — ready for
-    the log-sum-exp merge (across blocks or across sequence shards).
+    ``q5`` (b, g, r, sq, d) — GQA query group packed per KV head (sq = 1 for
+    plain decode, C for a prefill chunk); ``k``/``v`` (b, g, t, d) in fp or
+    int8; ``valid`` (b, t) bool — or (b, sq, t) for per-query masks (chunked
+    causal); ``k_scale``/``v_scale`` (b, g, t) f32 for int8 KV
+    (scale-after-dot, Fig. 4 Stage-3).  Returns ``(m, l, acc)`` of shapes
+    (b,g,r,sq), (b,g,r,sq), (b,g,r,sq,d) — ready for the log-sum-exp merge
+    (across blocks or across sequence shards).
     """
-    vmask = valid[:, None, None, None, :]
+    if valid.ndim == 2:
+        vmask = valid[:, None, None, None, :]
+    else:
+        vmask = valid[:, None, None, :, :]
     if k_scale is not None:
         logits = jnp.einsum("bgrqd,bgkd->bgrqk", q5, k.astype(q5.dtype),
                             preferred_element_type=jnp.float32)
@@ -80,6 +89,89 @@ def decode_softmax_partials(
     return m, l, acc
 
 
+def decode_blocked_partials(
+    q5: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    n_valid: jax.Array,
+    *,
+    scale: float,
+    q_pos: jax.Array | None = None,
+    window: int | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    block_kv: int = DEFAULT_DECODE_BLOCK_KV,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash-decoding partials over a blocked KV walk (the shared loop).
+
+    ``q5`` (b, g, rep, sq, d); caches (b, g, T, d); ``n_valid`` (b,) = number
+    of valid leading cache positions per row; ``q_pos`` (b, sq) = absolute
+    position of each query (enables intra-chunk causal + per-query window
+    masking; a negative entry marks a dead query — everything masked, l == 0),
+    or None when every query may see every valid position (the shard-local
+    partial case).  ``k_scale``/``v_scale`` (b, g, T) f32 for int8 KV.
+
+    A ``lax.while_loop`` walks KV blocks and stops after the last block any
+    row still needs, so bytes and FLOPs scale with ``max(n_valid)`` instead
+    of T.  Blocks a row has outgrown contribute exact zeros (masked p) and
+    exact-1 rescales, so the partials are bit-identical whatever the
+    batch-max trip count — batched results can't drift from batch-1.
+    Returns ``(m, l, acc)`` of shapes (b,g,rep,sq)/(b,g,rep,sq)/(b,g,rep,sq,d)
+    ready for the log-sum-exp merge (with other blocks or sequence shards).
+    """
+    b, g, rep, sq, d = q5.shape
+    max_len = k_cache.shape[2]
+    # bk need not divide max_len: the final block's slice start is clamped
+    # and its already-covered positions masked out (dynamic_slice can't
+    # overrun, and exactness survives because masked p is exactly 0)
+    bk = min(block_kv, max_len)
+    n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1), (b,))
+
+    n_live = (jnp.max(n_valid) + bk - 1) // bk              # traced trip count
+    if window is None or q_pos is None:
+        start = jnp.int32(0)
+    else:
+        # first block any query's window reaches (dead queries pull the min
+        # toward 0 — conservative, never wrong)
+        start = jnp.maximum(jnp.min(q_pos) - window + 1, 0) // bk
+    pos_base = jnp.arange(bk)
+
+    def body(carry):
+        ib, m, l, acc = carry
+        block_start = ib * bk
+        off = jnp.minimum(block_start, max_len - bk)   # clamp final block
+        kb = jax.lax.dynamic_slice_in_dim(k_cache, off, bk, axis=2)
+        vb = jax.lax.dynamic_slice_in_dim(v_cache, off, bk, axis=2)
+        ksb = None if k_scale is None else jax.lax.dynamic_slice_in_dim(
+            k_scale, off, bk, axis=2)
+        vsb = None if v_scale is None else jax.lax.dynamic_slice_in_dim(
+            v_scale, off, bk, axis=2)
+        pos = off + pos_base
+        # mask positions a clamped final block re-covers (pos < block_start)
+        valid = (pos[None, :] >= block_start) & \
+                (pos[None, :] < n_valid[:, None])           # (b, bk)
+        if q_pos is not None:
+            valid = valid[:, None, :] & \
+                (pos[None, None, :] <= q_pos[:, :, None])   # (b, sq, bk)
+            if window is not None:
+                valid &= pos[None, None, :] > (q_pos[:, :, None] - window)
+        mb, lb, accb = decode_softmax_partials(
+            q5, kb, vb, valid, scale=scale, k_scale=ksb, v_scale=vsb)
+        m_new = jnp.maximum(m, mb)
+        alpha = jnp.exp(m - m_new)
+        beta = jnp.exp(mb - m_new)
+        l_new = l * alpha + lb * beta
+        acc_new = acc * alpha[..., None] + accb * beta[..., None]
+        return ib + 1, m_new, l_new, acc_new
+
+    init = (start,
+            jnp.full((b, g, rep, sq), _NEG_INF, jnp.float32),
+            jnp.zeros((b, g, rep, sq), jnp.float32),
+            jnp.zeros((b, g, rep, sq, d), jnp.float32))
+    _, m, l, acc = jax.lax.while_loop(lambda c: c[0] < n_live, body, init)
+    return m, l, acc
+
+
 def decode_attention_blocked(
     q: jax.Array,
     k_cache: jax.Array,
@@ -98,18 +190,12 @@ def decode_attention_blocked(
     caches (b, hkv, MAX, d), ``lengths`` scalar or (b,).  A while_loop walks
     KV blocks and stops after the last block any row still needs, so a
     128-token context in a 2048-slot cache does 1/16th of the dense ref's
-    work.  Blocks a row has outgrown contribute exact zeros (masked p) and
-    exact-1 rescales, so results are bit-identical whatever the batch-max
-    trip count — the batched engine and the batch-1 oracle can't drift.
+    work — see ``decode_blocked_partials`` for the exactness argument.
     """
     b, hq, sq, d = q.shape
     hkv, max_len = k_cache.shape[1], k_cache.shape[2]
     rep = hq // hkv
     scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
-    # bk need not divide max_len: the final block's slice start is clamped
-    # and its already-covered positions masked out (dynamic_slice can't
-    # overrun, and exactness survives because masked p is exactly 0)
-    bk = min(block_kv, max_len)
     lengths = jnp.broadcast_to(
         jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
 
@@ -119,44 +205,63 @@ def decode_attention_blocked(
     ks3 = None if k_scale is None else k_scale.reshape(b, hkv, max_len)
     vs3 = None if v_scale is None else v_scale.reshape(b, hkv, max_len)
 
-    valid_len = jnp.clip(lengths, 0, max_len)
-    n_live = (jnp.max(valid_len) + bk - 1) // bk            # traced trip count
-    start = (jnp.int32(0) if window is None else
-             jnp.min(jnp.maximum(lengths - window, 0)) // bk)
-    pos_base = jnp.arange(bk)
-
-    def body(carry):
-        ib, m, l, acc = carry
-        block_start = ib * bk
-        off = jnp.minimum(block_start, max_len - bk)   # clamp final block
-        kb = jax.lax.dynamic_slice_in_dim(k_cache, off, bk, axis=2)
-        vb = jax.lax.dynamic_slice_in_dim(v_cache, off, bk, axis=2)
-        ksb = None if ks3 is None else jax.lax.dynamic_slice_in_dim(
-            ks3, off, bk, axis=2)
-        vsb = None if vs3 is None else jax.lax.dynamic_slice_in_dim(
-            vs3, off, bk, axis=2)
-        pos = off + pos_base
-        # mask positions a clamped final block re-covers (pos < block_start)
-        valid = (pos[None, :] >= block_start) & \
-                (pos[None, :] < valid_len[:, None])
-        if window is not None:
-            valid &= pos[None, :] >= (lengths[:, None] - window)
-        mb, lb, accb = decode_softmax_partials(
-            q5, kb, vb, valid, scale=scale_v, k_scale=ksb, v_scale=vsb)
-        m_new = jnp.maximum(m, mb)
-        alpha = jnp.exp(m - m_new)
-        beta = jnp.exp(mb - m_new)
-        l_new = l * alpha + lb * beta
-        acc_new = acc * alpha[..., None] + accb * beta[..., None]
-        return ib + 1, m_new, l_new, acc_new
-
-    init = (start,
-            jnp.full((b, hkv, rep, 1), _NEG_INF, jnp.float32),
-            jnp.zeros((b, hkv, rep, 1), jnp.float32),
-            jnp.zeros((b, hkv, rep, 1, d), jnp.float32))
-    _, m, l, acc = jax.lax.while_loop(lambda c: c[0] < n_live, body, init)
+    _, l, acc = decode_blocked_partials(
+        q5, k_cache, v_cache, jnp.clip(lengths, 0, max_len),
+        scale=scale_v, q_pos=(lengths - 1)[:, None], window=window,
+        k_scale=ks3, v_scale=vs3, block_kv=block_kv)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def mixed_attention_blocked(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    q_lens: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    block_kv: int = DEFAULT_DECODE_BLOCK_KV,
+) -> jax.Array:
+    """Mixed prefill/decode attention: per-row variable query counts.
+
+    q (b, hq, C, d) — C is the chunk bucket; row b's valid queries are
+    ``q[:, :, :q_lens[b]]`` (the rest is padding and returns zeros).
+    ``lengths`` (b,) = total valid context per row INCLUDING the chunk, so
+    query j of row b sits at absolute position ``lengths[b] - q_lens[b] + j``
+    and attends causally: cache positions ``<=`` its own.  ``q_lens[b] == 1``
+    is exactly single-token decode; a decoding row and a mid-prefill row
+    coexist in one dispatch — the serving tick's mixed batch.
+    """
+    b, hq, c, d = q.shape
+    hkv, max_len = k_cache.shape[1], k_cache.shape[2]
+    rep = hq // hkv
+    scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+    q_lens = jnp.broadcast_to(
+        jnp.asarray(q_lens, jnp.int32).reshape(-1), (b,))
+
+    k_cache = hint(k_cache, "batch", None, "seq_mp", None)
+    v_cache = hint(v_cache, "batch", None, "seq_mp", None)
+    q5 = q.reshape(b, hkv, rep, c, d)
+    ks3 = None if k_scale is None else k_scale.reshape(b, hkv, max_len)
+    vs3 = None if v_scale is None else v_scale.reshape(b, hkv, max_len)
+
+    j = jnp.arange(c)
+    q_pos = (lengths - q_lens)[:, None] + j[None, :]         # (b, C)
+    q_pos = jnp.where(j[None, :] < q_lens[:, None], q_pos, -1)  # dead queries
+
+    _, l, acc = decode_blocked_partials(
+        q5, k_cache, v_cache, jnp.clip(lengths, 0, max_len),
+        scale=scale_v, q_pos=q_pos, window=window,
+        k_scale=ks3, v_scale=vs3, block_kv=block_kv)
+    # dead queries have l == 0 (everything masked) -> exact zeros out
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, c, d).astype(q.dtype)
 
 
 def attention_chunked(

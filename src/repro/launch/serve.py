@@ -50,8 +50,8 @@ def main() -> None:
             max_new_tokens=args.max_new_tokens))
     done = engine.run()
     print("summary:", Engine.summarize(done))
-    print(f"scheduler: {engine.steps} steps, {engine.decode_calls} decode "
-          f"dispatches (1 per step), slot occupancy "
+    print(f"scheduler: {engine.steps} ticks, {engine.dispatches} dispatches "
+          f"(1 per tick, {engine.mixed_ticks} mixed), slot occupancy "
           f"{engine.slot_occupancy:.2f}")
     print(f"compile cache: {sorted(engine.cache_compiles.keys())} "
           f"({engine.cache_compiles.hits} hits, "

@@ -14,14 +14,24 @@ Slot-based serving surface (continuous batching, EdgeLLM §IV-B):
     cache_slot_axes(cfg)                       -> pytree of ints
     insert_request(cfg, cache, row, slot)      -> cache with row at slot
     evict_slot(cfg, cache, slot, max_len)      -> cache with slot reset
+    request_cache(cfg, params, batch, max_len) -> batch-1 admission cache
+    mixed_step(cfg, params, cache, tokens, lengths, q_lens)
 
 ``init_cache(cfg, B, max_len)`` allocates ONE resident cache whose request
-dimension is a *slot* index.  A prefill runs at batch 1 and its cache is
-scattered into a free slot (``insert_request``); ``decode_step`` then
-advances every slot at once with per-row ``lengths: (B,)``.  ``evict_slot``
-re-inserts a freshly-initialized row — for recurrent families this is the
-per-row state reset that makes slot reuse safe.  All three are jit-safe with
-a traced ``slot`` (one executable per batch size, not per slot).
+dimension is a *slot* index.  ``decode_step`` advances every slot at once
+with per-row ``lengths: (B,)``.  ``mixed_step`` is its chunked-prefill
+generalization: row ``b`` advances by ``q_lens[b]`` tokens this tick — 1
+for a decoding row, up to C (the chunk bucket) for a row mid-prefill — so
+prompt admission rides the SAME dispatch as decode instead of a separate
+batch-1 prefill that head-of-line-blocks the batch.  Because chunks run
+through the cache-updating step path, recurrent families (ssm/hybrid)
+materialize the TRUE post-prompt state (closing the old forward-as-prefill
+gap).  ``evict_slot`` re-inserts a freshly-initialized row — for recurrent
+families this is the per-row state reset that makes slot reuse safe; and
+``request_cache`` builds the batch-1 row chunked admission starts from
+(pristine state, plus the request's cross-attention K/V for audio).  All
+slot ops are jit-safe with a traced ``slot`` (one executable per batch
+size, not per slot).
 """
 
 from __future__ import annotations
@@ -159,4 +169,112 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         return zamba.decode_step(cfg, params, cache, tokens, lengths)
     if cfg.family == "audio":
         return whisper.decode_step(cfg, params, cache, tokens, lengths)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def request_cache(cfg: ModelConfig, params: Params, batch: dict,
+                  max_len: int) -> Params:
+    """Batch-1 cache a request's chunked admission starts from.
+
+    Pure-KV families get a pristine ``init_cache`` row (stale KV in a reused
+    slot is invisible behind true-length masking, so the engine can even
+    skip inserting it — see ``needs_admission_insert``).  Audio additionally
+    carries the request's cross-attention K/V, encoded once from its frames.
+    """
+    if cfg.family == "audio":
+        return whisper.request_cache(cfg, params, batch["frames"], max_len)
+    return init_cache(cfg, 1, max_len)
+
+
+def needs_admission_insert(cfg: ModelConfig) -> bool:
+    """Whether chunked admission must scatter ``request_cache`` into the
+    slot before streaming the prompt.  Recurrent families carry state the
+    previous occupant mutated (the mLSTM ``m`` stabilizer, Mamba conv/SSM
+    state) and audio carries per-request cross-KV; pure-KV families need
+    nothing — their stale rows hide behind true-length masking, so
+    admission costs ZERO extra dispatches.
+    """
+    return cfg.family in ("ssm", "hybrid", "audio")
+
+
+def _mixed_step_scan(cfg: ModelConfig, params: Params, cache: Params,
+                     tokens: jax.Array, lengths, q_lens):
+    """Generic mixed step for recurrent/stateful families.
+
+    Scans the chunk axis INSIDE one jitted call (still one device dispatch
+    per serving tick), advancing each row only while ``j < q_lens[b]`` via a
+    per-row select over the cache pytree — recurrences are order-exact, so
+    the resulting state is bit-identical to feeding the tokens one
+    ``decode_step`` at a time.  This is what materializes the TRUE
+    post-prompt recurrent state for ssm/hybrid during chunked admission.
+    """
+    b, c = tokens.shape
+    lengths = jnp.asarray(lengths, jnp.int32)
+    q_lens = jnp.asarray(q_lens, jnp.int32)
+    axes = cache_slot_axes(cfg)
+
+    def body(carry, j):
+        cur, logits = carry
+        active = j < q_lens                                      # (B,)
+        tok = jax.lax.dynamic_slice_in_dim(tokens, j, 1, axis=1)
+        # inactive rows re-run their final position; their writes are
+        # reverted by the select below, so this is just shape plumbing
+        step_len = lengths + jnp.minimum(j + 1, jnp.maximum(q_lens, 1))
+        lg, new = decode_step(cfg, params, cur, tok, step_len)
+
+        def sel(n, old, ax):
+            shape = [1] * n.ndim
+            shape[ax] = b
+            return jnp.where(active.reshape(shape), n, old)
+
+        cur = jax.tree.map(sel, new, cur, axes)
+        logits = jnp.where((j == q_lens - 1)[:, None],
+                           lg.astype(logits.dtype), logits)
+        return (cur, logits), None
+
+    init_logits = jnp.zeros((b, cfg.vocab_size), cfg.dtype)
+    (cache, logits), _ = jax.lax.scan(
+        body, (cache, init_logits), jnp.arange(c, dtype=jnp.int32))
+    return logits, cache
+
+
+def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
+               tokens: jax.Array, lengths, q_lens):
+    """Advance every row by a per-row token count in ONE dispatch.
+
+    tokens (B, C); ``lengths`` (B,) = valid cache tokens BEFORE this step;
+    ``q_lens`` (B,) = live tokens per row this tick (0 = idle slot, 1 =
+    decoding row, up to C = mid-prefill row, left-aligned in its chunk).
+    Returns (logits (B, V) of each row's last live token, new cache).
+
+    Transformer families run the fused chunk-attention path (one KV stream
+    for the whole mixed batch); recurrent/stateful families scan the chunk
+    axis in-executable (``_mixed_step_scan``).  ``C == 1`` delegates to
+    ``decode_step`` (bit-identical to the classic pure-decode tick when
+    every row is live), with a per-row select keeping ``q_lens == 0`` rows
+    exactly untouched.
+    """
+    if tokens.shape[1] == 1:
+        b = tokens.shape[0]
+        lengths = jnp.broadcast_to(
+            jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+        q_lens = jnp.broadcast_to(
+            jnp.asarray(q_lens, jnp.int32).reshape(-1), (b,))
+        logits, new = decode_step(cfg, params, cache, tokens,
+                                  lengths + jnp.maximum(q_lens, 1))
+        active = q_lens > 0
+
+        def sel(n, old, ax):
+            shape = [1] * n.ndim
+            shape[ax] = b
+            return jnp.where(active.reshape(shape), n, old)
+
+        new = jax.tree.map(sel, new, cache, cache_slot_axes(cfg))
+        return jnp.where(active[:, None], logits,
+                         jnp.zeros_like(logits)), new
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.mixed_step(cfg, params, cache, tokens, lengths,
+                                      q_lens)
+    if cfg.family in ("ssm", "hybrid", "audio"):
+        return _mixed_step_scan(cfg, params, cache, tokens, lengths, q_lens)
     raise ValueError(f"unknown family {cfg.family!r}")

@@ -148,6 +148,78 @@ def attn_prefill(cfg, p: Params, x: jax.Array, positions, cache: Params):
     return out, cache
 
 
+def _chunk_write(cache_leaf: jax.Array, new: jax.Array, starts: jax.Array,
+                 q_lens: jax.Array) -> jax.Array:
+    """Scatter per-row variable-length chunks into a (B, hkv, L, w) cache.
+
+    Row ``b`` writes ``new[b, :, :q_lens[b]]`` at positions
+    ``starts[b] .. starts[b] + q_lens[b] - 1`` — a read-modify-write of one
+    C-wide block per row, so positions outside the live span keep their
+    current cache values exactly (a q_lens == 0 row is a no-op, and a row
+    near the MAX boundary never clobbers valid neighbors the way a clamped
+    ``dynamic_update_slice`` of the raw chunk would).  Callers guarantee
+    ``starts + q_lens <= L``.
+    """
+    c = new.shape[2]
+    cache_len = cache_leaf.shape[2]
+    idx = jnp.arange(c)
+
+    def one(dst, blk, start, ql):
+        off = jnp.clip(start, 0, cache_len - c)
+        delta = start - off            # 0 unless the block straddles the end
+        cur = jax.lax.dynamic_slice_in_dim(dst, off, c, axis=1)
+        shifted = jnp.roll(blk, delta, axis=1)
+        mask = (idx >= delta) & (idx < delta + ql)
+        merged = jnp.where(mask[None, :, None], shifted.astype(dst.dtype), cur)
+        return jax.lax.dynamic_update_slice_in_dim(dst, merged, off, axis=1)
+
+    return jax.vmap(one)(cache_leaf, new, jnp.asarray(starts, jnp.int32),
+                         jnp.asarray(q_lens, jnp.int32))
+
+
+def attn_mixed(cfg, p: Params, x: jax.Array, positions, cache: Params,
+               lengths: jax.Array, q_lens: jax.Array):
+    """Mixed prefill/decode attention step.  x (b, C, d); ``lengths`` (b,) =
+    valid cache tokens BEFORE this step; ``q_lens`` (b,) = live new tokens
+    per row (1 = decoding row, up to C = mid-prefill row; the rest of the
+    chunk is padding).  Writes each row's live K/V at its true positions —
+    no left-pad bucket writes — then attends over the cache with intra-chunk
+    causal masking.  Requires ``lengths + q_lens <= cache_len`` (the serving
+    scheduler's cache-room invariant), which also means a rolling-SWA buffer
+    never wraps here — so the rolling case degenerates to the non-rolling
+    one and ``cfg.window`` masking applies directly.
+    """
+    b, c, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    q_lens = jnp.asarray(q_lens, jnp.int32)
+    total = lengths + q_lens
+
+    if cfg.kv_quant == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = {
+            "k": _chunk_write(cache["k"], kq, lengths, q_lens),
+            "v": _chunk_write(cache["v"], vq, lengths, q_lens),
+            "k_scale": _chunk_write(cache["k_scale"], ks, lengths, q_lens),
+            "v_scale": _chunk_write(cache["v_scale"], vs, lengths, q_lens),
+        }
+        o = ops.mixed_attention(q, new_cache["k"], new_cache["v"], total,
+                                q_lens, window=cfg.window,
+                                k_scale=new_cache["k_scale"],
+                                v_scale=new_cache["v_scale"])
+    else:
+        new_cache = {
+            "k": _chunk_write(cache["k"], k, lengths, q_lens),
+            "v": _chunk_write(cache["v"], v, lengths, q_lens),
+        }
+        o = ops.mixed_attention(q, new_cache["k"], new_cache["v"], total,
+                                q_lens, window=cfg.window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.head_dim)
+    out = linear(o, p["wo"], use_kernels=cfg.use_kernels)
+    return out, new_cache
+
+
 def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
                 lengths: jax.Array):
     """One-token decode.  x (b, 1, d); lengths (b,) = context length

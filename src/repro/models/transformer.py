@@ -268,6 +268,47 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, tokens: jax.Array,
     return logits, cache
 
 
+def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
+               tokens: jax.Array, lengths, q_lens):
+    """Mixed prefill/decode step (one dispatch for the whole tick).
+
+    tokens (B, C); ``lengths`` (B,) = valid cache tokens BEFORE this step;
+    ``q_lens`` (B,) = live new tokens per row — 1 for a decoding row, up to
+    C for a row mid-prefill (its chunk is ``tokens[b, :q_lens[b]]``, the
+    rest padding).  Token j of row b sits at true position ``lengths[b]+j``
+    (no left-pad bucket positions).  Returns (logits (B, V) of each row's
+    LAST live token, new cache).
+    """
+    b, c = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    q_lens = jnp.asarray(q_lens, jnp.int32)
+    pos = lengths[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    if cfg.rope_type == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, b, c))
+
+    def body(carry, inp):
+        bp, layer_cache = inp
+        h, new_cache = attention.attn_mixed(
+            cfg, bp["attn"], layers.apply_norm(cfg, bp["ln_attn"], carry),
+            pos, layer_cache, lengths, q_lens)
+        x2 = carry + h
+        inner = layers.apply_norm(cfg, bp["ln_mlp"], x2)
+        if cfg.is_moe:
+            f, _ = moe.moe_apply(cfg, bp["moe"], inner)
+        else:
+            f = layers.mlp_apply(cfg, bp["mlp"], inner)
+        return x2 + f, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    # only each row's last live position reaches the LM head (C-fold cheaper
+    # than unembedding the full chunk; mid-prefill rows need just this one)
+    idx = jnp.clip(q_lens - 1, 0, c - 1)
+    x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    x_last = layers.apply_norm(cfg, params["ln_f"], x_last)
+    return unembed(cfg, params, x_last)[:, 0], new_cache
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 tokens: jax.Array, lengths):
     """One decode step.  tokens (B, 1); lengths scalar or (B,) — context

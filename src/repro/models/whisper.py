@@ -149,6 +149,24 @@ def cache_slot_axes(cfg: ModelConfig) -> Params:
     }
 
 
+def request_cache(cfg: ModelConfig, params: Params, frames: jax.Array,
+                  max_len: int):
+    """Admission cache for chunked serving: pristine self-KV plus this
+    request's cross-attention K/V (computed ONCE from its encoder output —
+    the paper's "pre-processable weight-like operand").  The decoder prompt
+    then streams through ``decode_step``/``mixed_step`` chunks against it.
+    """
+    enc = encode(cfg, params, frames)
+    cache = init_cache(cfg, frames.shape[0], max_len)
+
+    def body(carry, bp):
+        k, v = attention.cross_kv(cfg, bp["cross_attn"], enc)
+        return carry, {"k": k, "v": v}
+
+    _, cross = jax.lax.scan(body, None, params["dec_blocks"])
+    return {"self": cache["self"], "cross": cross}
+
+
 def prefill(cfg: ModelConfig, params: Params, frames: jax.Array,
             tokens: jax.Array, max_len: int):
     """Encode audio, run the decoder prompt, build all caches."""

@@ -2,12 +2,27 @@
 
 ``shard_map`` graduated from ``jax.experimental`` to the ``jax`` namespace
 in newer releases; the call sites here use keyword arguments
-(``mesh=/in_specs=/out_specs=``) that both versions accept.
+(``mesh=/in_specs=/out_specs=``) that both versions accept.  The
+replication-check flag also renamed (``check_rep`` -> ``check_vma``), so
+the wrapper translates whichever spelling the installed jax understands —
+call sites always pass ``check_rep``.
 """
+
+import inspect
 
 import jax
 
 try:
-    shard_map = jax.shard_map  # jax >= 0.5
+    _shard_map = jax.shard_map  # jax >= 0.5
 except AttributeError:  # jax 0.4.x
-    from jax.experimental.shard_map import shard_map  # noqa: F401
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    if "check_rep" in kwargs and "check_rep" not in _PARAMS:
+        val = kwargs.pop("check_rep")
+        if "check_vma" in _PARAMS:
+            kwargs["check_vma"] = val
+    return _shard_map(f, **kwargs)

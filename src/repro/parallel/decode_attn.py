@@ -87,22 +87,27 @@ def decode_attention_sharded(
             ck2, cv2 = upd(ck, kn), upd(cv, vn)
             ksc2 = vsc2 = None
 
-        # partial attention over the local slice, via the SAME inner kernel
-        # as the single-host blocked path (kernels/xla_attention).  Its two
+        # partial attention over the local slice, via the SAME blocked
+        # walker as the single-host path (kernels/xla_attention).  Its
         # traffic rules (measured on qwen3 decode, §Perf): (1) the cache
         # stays in its storage dtype — an explicit .astype(f32) materializes
         # a full f32 cache copy per layer; (2) GQA via grouped einsum, NOT
         # jnp.repeat — repeating K/V to 32 heads materializes rep x the
-        # cache bytes.  int8 KV: scale-after-dot (the paper's Stage-3 trick
-        # applied to the dynamic operand): logits_s = (q·k_q_s)·kscale_s.
-        from repro.kernels.xla_attention import decode_softmax_partials
+        # cache bytes; (3) per-shard block skipping — each shard clamps the
+        # walk to ITS live positions (`length - off`), so a shard whose
+        # slice sits past the valid context streams zero KV blocks instead
+        # of its whole slice (the length-clamp trick from decode_flash.py,
+        # restated for shard_map).  int8 KV: scale-after-dot (the paper's
+        # Stage-3 trick applied to the dynamic operand):
+        # logits_s = (q·k_q_s)·kscale_s.
+        from repro.kernels.xla_attention import decode_blocked_partials
         bl = q_l.shape[0]                                    # local batch
         q5 = q_l.reshape(bl, hkv, rep, 1, hd)
-        pos = off + jnp.arange(s_loc)
         valid_len = jnp.minimum(length, S) if rolling else length
-        valid = jnp.broadcast_to((pos < valid_len)[None], (bl, s_loc))
-        m_loc, l_loc, acc = decode_softmax_partials(
-            q5, ck2, cv2, valid, scale=scale_v,
+        local_live = jnp.clip(valid_len - off, 0, s_loc)
+        m_loc, l_loc, acc = decode_blocked_partials(
+            q5, ck2, cv2, jnp.broadcast_to(local_live, (bl,)),
+            scale=scale_v,
             k_scale=ksc2[..., 0] if quant else None,
             v_scale=vsc2[..., 0] if quant else None)
 
@@ -119,6 +124,10 @@ def decode_attention_sharded(
 
     cache_spec = P(batch_ax, None, sa if len(sa) > 1 else sa[0], None)
     rep_spec = P(batch_ax, None, None, None)
+    # check_rep=False: the blocked partials walk is a lax.while_loop (trip
+    # count = this shard's live blocks), which shard_map's replication
+    # checker cannot type yet; the explicit pmax/psum merge below is what
+    # establishes replication of the output
     if quant:
         ksc, vsc = scales
         fn = shard_map(
@@ -127,6 +136,7 @@ def decode_attention_sharded(
                       cache_spec, cache_spec, P()),
             out_specs=(rep_spec, cache_spec, cache_spec, cache_spec,
                        cache_spec),
+            check_rep=False,
         )
         out, k2, v2, ks2, vs2 = fn(q, k_new, v_new, k_cache, v_cache,
                                    ksc, vsc, lengths)
@@ -139,6 +149,7 @@ def decode_attention_sharded(
         local_noq, mesh=mesh,
         in_specs=(rep_spec, rep_spec, rep_spec, cache_spec, cache_spec, P()),
         out_specs=(rep_spec, cache_spec, cache_spec),
+        check_rep=False,
     )
     out, k2, v2 = fn(q, k_new, v_new, k_cache, v_cache, lengths)
     return out, {"k": k2, "v": v2}

@@ -1,36 +1,50 @@
-"""Serving engine: slot-based continuous batching (EdgeLLM §IV-B, Fig. 9).
+"""Serving engine: chunked-prefill continuous batching over one slot cache
+(EdgeLLM §IV-B, Fig. 9 — plus the §IV "one data shape for every operator"
+contract applied to admission).
 
-The paper's deployment keeps the accelerator saturated by pre-compiling a
-fixed executable set and pipelining host work behind device compute.  The
-JAX restatement of that contract, end to end:
+The paper keeps the FPGA saturated by giving every operator the same data
+shape so one fixed executable processes any token stream.  The seed engine
+broke that contract at admission time: each new prompt ran a *separate*
+batch-1 bucketed prefill that head-of-line-blocked every live decode slot
+for the whole prompt.  This engine fuses admission into the per-step decode
+dispatch instead:
 
 * **One resident cache.**  ``api.init_cache(cfg, B, max_len)`` allocates a
   single slot-based cache (KV: ``(layers, B, heads, L, hd)``; recurrent
   families: per-row state) that lives on device for the engine's lifetime.
   Requests do not own cache pytrees — they *lease a slot*.
 
-* **Batch-1 bucketed prefill, scattered into a slot.**  A prompt prefills
-  at its ``TokenBuckets`` length bucket (the paper's per-token-length
-  instruction streams) and the resulting row cache is written into a free
-  slot with ``api.insert_request`` — a ``dynamic_update_slice`` scatter
-  whose slot index is a traced operand, so one executable covers all slots.
+* **One mixed-batch dispatch per tick.**  ``api.mixed_step`` advances ALL
+  ``B`` slots in a single jitted call; row ``b`` advances by ``q_lens[b]``
+  tokens — 1 for a decoding row, up to C (the chunk bucket) for a row
+  mid-prefill.  Prompts are split into chunk-bucket pieces (Sarathi-style
+  token budget) and co-scheduled with decode rows, so admission costs ZERO
+  extra dispatches and decode rows never stall behind a long prompt.  Ticks
+  with no prefill work degrade to the classic ``api.decode_step``
+  executable — bit-identical to the batch-1 oracle.
 
-* **One jitted decode per step, per-row lengths.**  ``api.decode_step``
-  advances ALL ``B`` slots in a single device call against the shared cache
-  with ``lengths: (B,)`` masking each row to its own context — decode cost
-  is one dispatch per step regardless of how many requests are live, not
-  O(live) Python-dispatched batch-1 calls.
+* **True-length accounting.**  Slots track the request's TRUE token count
+  (not a padded bucket): K/V land at the row's real positions
+  (``dynamic_update_slice`` at its current length — no left-pad writes),
+  decode never attends over pad tokens, and cache room is measured exactly
+  — a prompt is admissible whenever ``len(prompt) <= max_len``.
 
-* **Continuous batching.**  Finished rows are retired mid-flight
-  (``api.evict_slot`` resets recurrent state) and immediately refilled from
-  the queue; the batch never drains to restart.  This is the scheduler half
-  of Fig. 9 — the host admits/retires while JAX's async dispatch overlaps
-  the next step's input prep with device compute (``core/pipeline.py``
-  measures that overlap).
+* **True recurrent prefill.**  Chunks run the prompt *through the
+  cache-updating step path*, so ssm/hybrid slots hold the REAL post-prompt
+  recurrent state (the old forward-as-prefill gap is closed); admission
+  first resets the leased slot via ``api.request_cache`` +
+  ``insert_request`` for the families that need it (recurrent state, audio
+  cross-KV).
 
-* **Bounded compilation.**  Executables are memoized in ``CompileCache``
-  under ``("prefill", bucket)`` / ``("decode", B)`` / ``("insert", B)`` —
-  misses are bounded by ``n_buckets + 2`` no matter the traffic.
+* **Continuous batching.**  Finished rows are retired mid-flight and
+  immediately refilled from the queue; the batch never drains to restart.
+
+* **Bounded compilation.**  Executables memoize in ``CompileCache`` under
+  ``("mixed", W)`` (one per chunk-width bucket W), ``("decode", B)`` and
+  ``("insert", B)`` — misses are bounded by ``n_chunk_buckets + 2``
+  regardless of traffic (audio adds one ``("admit", F)`` encoder
+  executable), the XLA analogue of the paper's per-token-length instruction
+  streams with a MAX-token address space.
 """
 
 from __future__ import annotations
@@ -61,33 +75,34 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: float | None = None
     finished_at: float | None = None
+    token_times: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
 class _Slot:
     """Host-side mirror of one row of the resident cache."""
     req: Request | None = None
-    length: int = 1                  # valid context length of this row
+    length: int = 0                  # TRUE tokens resident in this row
+    pos: int = 0                     # prompt tokens consumed (chunk cursor)
     last_token: int = 0              # input token for the next decode step
 
-
-def _bucketed_prompt_batch(prompt: np.ndarray, bucket: int,
-                           frames: np.ndarray | None = None) -> dict:
-    """Left-pad a prompt into its token bucket; shared by the engine and
-    the batch-1 oracle so their prefill inputs can never drift apart."""
-    padded = np.zeros((1, bucket), np.int32)
-    padded[0, -len(prompt):] = prompt
-    batch = {"tokens": jnp.asarray(padded)}
-    if frames is not None:
-        f = np.asarray(frames)
-        batch["frames"] = jnp.asarray(f[None] if f.ndim == 2 else f)
-    return batch
+    @property
+    def prefilling(self) -> bool:
+        return self.req is not None and self.pos < len(self.req.prompt)
 
 
-def _prefill_executable(cfg: ModelConfig, max_len: int):
-    def fn(p, batch):
-        return api.prefill(cfg, p, batch, max_len)
-    return jax.jit(fn)
+def _mixed_executable(cfg: ModelConfig):
+    def fn(p, c, tokens, lengths, q_lens):
+        logits, new_c = api.mixed_step(cfg, p, c, tokens, lengths, q_lens)
+        return jnp.argmax(logits, axis=-1), logits, new_c
+    return jax.jit(fn, donate_argnums=(1,))
+
+
+def _decode_executable(cfg: ModelConfig):
+    def fn(p, c, tokens, lengths):
+        logits, new_c = api.decode_step(cfg, p, c, tokens, lengths)
+        return jnp.argmax(logits, axis=-1), logits, new_c
+    return jax.jit(fn, donate_argnums=(1,))
 
 
 def _insert_executable(cfg: ModelConfig):
@@ -98,40 +113,61 @@ def _insert_executable(cfg: ModelConfig):
     return jax.jit(fn, donate_argnums=(0,))
 
 
-def _decode_executable(cfg: ModelConfig):
-    def fn(p, c, tokens, lengths):
-        logits, new_c = api.decode_step(cfg, p, c, tokens, lengths)
-        return jnp.argmax(logits, axis=-1), logits, new_c
-    return jax.jit(fn, donate_argnums=(1,))
+def _admit_executable(cfg: ModelConfig, max_len: int):
+    def fn(p, frames):
+        return api.request_cache(cfg, p, {"frames": frames}, max_len)
+    return jax.jit(fn)
 
 
 class Engine:
-    """Continuous-batching decode engine over one slot-based cache."""
+    """Continuous-batching engine: one mixed-batch dispatch per tick."""
 
     def __init__(self, cfg: ModelConfig, params: Any, *, batch_size: int = 4,
                  max_len: int = 512, eos_id: int | None = None,
+                 chunk_size: int = 64,
+                 prefill_token_budget: int | None = None,
+                 prefill_policy: str = "mixed",
                  compile_cache: CompileCache | None = None):
+        if prefill_policy not in ("mixed", "stall"):
+            raise ValueError(f"unknown prefill_policy {prefill_policy!r}")
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.eos_id = eos_id
-        self.buckets = TokenBuckets(max_tokens=max_len)
+        # >= 2 so a mixed tick never takes mixed_step's C == 1 decode
+        # delegation (that path assumes every row advances by one token)
+        self.chunk_size = max(2, min(chunk_size, max_len))
+        # chunk widths are bucketed so executables stay bounded: a tick's
+        # dispatch width W is the smallest bucket covering its largest chunk
+        self.chunk_buckets = TokenBuckets(
+            max_tokens=self.chunk_size,
+            min_bucket=min(16, self.chunk_size))
+        self.prefill_token_budget = prefill_token_budget
+        self.prefill_policy = prefill_policy
         # a shared compile cache must come from an engine with the same
-        # (cfg, max_len): executables bake both in
+        # (cfg, max_len, batch, chunk_size): executables bake these in
         self.cache_compiles = compile_cache or CompileCache()
         self._queue: "queue.Queue[Request]" = queue.Queue()
-        # the resident slot cache (slots are reset lazily: admission
-        # overwrites every leaf of the leased row)
+        # the resident slot cache (pure-KV slots are reset lazily — stale
+        # rows hide behind true-length masking; stateful families are reset
+        # at admission via insert_request)
         self.cache = api.init_cache(cfg, batch_size, max_len)
         self._slots = [_Slot() for _ in range(batch_size)]
+        # pristine batch-1 row for stateful-family admission resets
+        self._fresh_row = (api.init_cache(cfg, 1, max_len)
+                           if api.needs_admission_insert(cfg) and
+                           cfg.family != "audio" else None)
         self.steps = 0
-        self.decode_calls = 0        # must equal steps: one dispatch per step
+        self.dispatches = 0          # must equal steps: one dispatch per tick
+        self.mixed_ticks = 0
         self._occupancy_sum = 0.0
 
     # -- client API ----------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
         if len(req.prompt) > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
@@ -139,26 +175,29 @@ class Engine:
         req.submitted_at = time.monotonic()
         self._queue.put(req)
 
-    # -- executables (all memoized: misses bounded by n_buckets + 2) ---------
+    @property
+    def compile_budget(self) -> int:
+        """Upper bound on compile-cache misses this engine can cause:
+        n_chunk_buckets (mixed widths) + decode + insert.  Audio adds one
+        ``("admit", F)`` encoder executable per DISTINCT frame count seen —
+        traffic-dependent, so it is counted from the cache, keeping
+        ``misses <= compile_budget`` an invariant for any workload."""
+        extra = sum(1 for name, _ in self.cache_compiles.keys()
+                    if name == "admit")
+        return len(self.chunk_buckets.all_buckets()) + 2 + extra
 
-    def _build_prefill(self):
-        return _prefill_executable(self.cfg, self.max_len)
+    # -- executables (all memoized: misses bounded by compile_budget) --------
 
-    def _build_insert(self):
-        return _insert_executable(self.cfg)
+    def _build_mixed(self):
+        return _mixed_executable(self.cfg)
 
     def _build_decode(self):
         return _decode_executable(self.cfg)
 
-    # -- internals -----------------------------------------------------------
+    def _build_insert(self):
+        return _insert_executable(self.cfg)
 
-    def _prefill_one(self, req: Request):
-        """Batch-1 prefill at the request's length bucket."""
-        bucket = self.buckets.bucket(len(req.prompt))
-        fn = self.cache_compiles.get("prefill", bucket, self._build_prefill)
-        batch = _bucketed_prompt_batch(req.prompt, bucket, req.frames)
-        logits, row_cache = fn(self.params, batch)
-        return logits, row_cache, bucket
+    # -- internals -----------------------------------------------------------
 
     def _finish(self, req: Request, completed: list[Request]) -> None:
         req.done = True
@@ -166,93 +205,169 @@ class Engine:
         completed.append(req)
 
     def _free_slot(self, idx: int) -> None:
-        """Retire a row: release the host lease.
-
-        Device eviction is lazy — the next ``_admit`` overwrites every leaf
-        of the row (``api.evict_slot`` exists for callers that need an
-        eager reset), so retirement costs no device dispatch.  The dead row
-        rides along in decode at its parked length; its output is ignored.
-        """
+        """Retire a row: release the host lease.  Device eviction is lazy —
+        pure-KV rows hide behind true-length masking and stateful rows are
+        reset by the next admission's ``insert_request`` — so retirement
+        costs no device dispatch.  The dead row rides along in later ticks
+        at q_len 0 / its parked length; its output is ignored."""
         self._slots[idx] = _Slot()
 
-    def _admit(self, req: Request, idx: int, sample, completed) -> None:
-        """Prefill ``req`` and lease slot ``idx`` to it (continuous refill)."""
-        logits, row_cache, bucket = self._prefill_one(req)
-        row = np.asarray(logits[0])        # blocks until the device is done
-        req.first_token_at = time.monotonic()
-        tok = int(np.argmax(row)) if sample is None else int(sample(row))
-        req.output.append(tok)
+    def _admit(self, req: Request, idx: int) -> None:
+        """Lease slot ``idx`` to ``req``.  No prefill dispatch happens here:
+        the prompt streams through subsequent mixed ticks.  Stateful
+        families scatter a fresh ``request_cache`` row into the slot first
+        (recurrent-state reset; audio also carries the request's cross-KV)."""
+        if api.needs_admission_insert(self.cfg):
+            if self.cfg.family == "audio":
+                f = np.asarray(req.frames)
+                frames = jnp.asarray(f[None] if f.ndim == 2 else f)
+                admit = self.cache_compiles.get(
+                    "admit", frames.shape[1],
+                    lambda: _admit_executable(self.cfg, self.max_len))
+                row = admit(self.params, frames)
+            else:
+                row = self._fresh_row
+            insert = self.cache_compiles.get("insert", self.batch,
+                                             self._build_insert)
+            self.cache = insert(self.cache, row, np.int32(idx))
+        self._slots[idx] = _Slot(req=req)
+
+    def _schedule_chunks(self) -> list[int]:
+        """Pick this tick's per-slot prompt-chunk sizes (Sarathi-style).
+
+        Returns q_lens for mid-prefill rows only (0 elsewhere).  The
+        "mixed" policy advances every mid-prefill row, subject to the
+        token budget (FIFO by slot, at least one row always advances);
+        the "stall" policy advances only the oldest mid-prefill row —
+        the seed's head-of-line-blocking admission, kept as the
+        serving_bench baseline.
+        """
+        chunks = [0] * self.batch
+        budget = self.prefill_token_budget
+        picked = 0
+        for i, s in enumerate(self._slots):
+            if not s.prefilling:
+                continue
+            want = min(self.chunk_size, len(s.req.prompt) - s.pos)
+            if picked and budget is not None:
+                want = min(want, max(budget, 0))
+            if picked and self.prefill_policy == "stall":
+                want = 0
+            if want <= 0:
+                continue
+            chunks[i] = want
+            picked += 1
+            if budget is not None:
+                budget -= want
+        return chunks
+
+    def _emit(self, idx: int, token: int, completed: list[Request],
+              first: bool) -> None:
+        """Record one generated token; finish/free the slot when done."""
+        slot = self._slots[idx]
+        req = slot.req
+        now = time.monotonic()
+        if first:
+            req.first_token_at = now
+        req.output.append(token)
+        req.token_times.append(now)
+        slot.last_token = token
         if (len(req.output) >= req.max_new_tokens or
-                bucket >= self.max_len or   # no cache room left to decode into
-                (self.eos_id is not None and tok == self.eos_id)):
-            self._finish(req, completed)   # done at prefill; slot stays free
-            return
-        insert = self.cache_compiles.get("insert", self.batch,
-                                         self._build_insert)
-        self.cache = insert(self.cache, row_cache, np.int32(idx))
-        self._slots[idx] = _Slot(req=req, length=bucket, last_token=tok)
+                slot.length >= self.max_len or  # no cache room to decode into
+                (self.eos_id is not None and token == self.eos_id)):
+            self._finish(req, completed)
+            self._free_slot(idx)
 
     def run(self, *, max_steps: int = 10_000,
             sample: Callable | None = None) -> list[Request]:
         """Drain the queue; returns completed requests.
 
-        Each loop iteration: (1) retire rows out of cache room, (2) refill
-        every free slot from the queue (prefill + slot insert), (3) advance
-        ALL slots with exactly one jitted decode call.  ``sample`` maps a
-        logits row (V,) to a token id; greedy argmax (computed on device)
-        when None.
+        Each tick: (1) refill free slots from the queue (a host-side lease
+        — no prefill dispatch), (2) co-schedule prompt chunks with decode
+        rows, (3) advance ALL slots with exactly one jitted call —
+        ``mixed_step`` when any prompt chunk is in flight, the classic
+        ``decode_step`` otherwise.  ``sample`` maps a logits row (V,) to a
+        token id; greedy argmax (computed on device) when None.
         """
         completed: list[Request] = []
         start_steps = self.steps       # max_steps bounds THIS call, not the
         while self.steps - start_steps < max_steps:  # engine's lifetime
-            # 1. retire rows whose context hit the cache bound
-            for i, slot in enumerate(self._slots):
-                if slot.req is not None and slot.length >= self.max_len:
-                    self._finish(slot.req, completed)
-                    self._free_slot(i)
-            # 2. continuous refill: admit queued requests into free slots
+            # 1. continuous refill: admit queued requests into free slots
             for i in range(self.batch):
-                while self._slots[i].req is None and not self._queue.empty():
-                    self._admit(self._queue.get(), i, sample, completed)
+                if self._slots[i].req is None and not self._queue.empty():
+                    self._admit(self._queue.get(), i)
             live = [i for i, s in enumerate(self._slots) if s.req is not None]
             if not live:
                 break  # queue drained and no row in flight
-            # 3. one batched decode step for all B rows (dead rows ride along
-            #    at their parked length; their output is ignored)
-            tokens = np.fromiter((s.last_token for s in self._slots),
-                                 np.int32, self.batch).reshape(self.batch, 1)
-            lengths = np.fromiter(
-                (s.length + (1 if s.req is not None else 0)
-                 for s in self._slots), np.int32, self.batch)
-            decode = self.cache_compiles.get("decode", self.batch,
+            chunks = self._schedule_chunks()
+            stall = (self.prefill_policy == "stall" and any(chunks))
+            decoding = [i for i in live
+                        if not self._slots[i].prefilling and not stall]
+
+            if any(chunks):
+                # 2a. mixed tick: prompt chunks + decode rows, one dispatch
+                w = self.chunk_buckets.bucket(max(max(chunks), 2))
+                tokens = np.zeros((self.batch, w), np.int32)
+                lengths = np.zeros(self.batch, np.int32)
+                q_lens = np.zeros(self.batch, np.int32)
+                for i, s in enumerate(self._slots):
+                    lengths[i] = s.length
+                    if chunks[i]:
+                        q_lens[i] = chunks[i]
+                        tokens[i, :chunks[i]] = \
+                            s.req.prompt[s.pos:s.pos + chunks[i]]
+                    elif i in decoding:
+                        q_lens[i] = 1
+                        tokens[i, 0] = s.last_token
+                fn = self.cache_compiles.get("mixed", w, self._build_mixed)
+                next_tok, logits, self.cache = fn(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(lengths), jnp.asarray(q_lens))
+                self.mixed_ticks += 1
+            else:
+                # 2b. pure-decode tick: the classic executable (bit-identical
+                # to the batch-1 oracle; dead rows ride along, output ignored)
+                tokens = np.fromiter((s.last_token for s in self._slots),
+                                     np.int32, self.batch).reshape(-1, 1)
+                lengths = np.fromiter(
+                    (s.length + 1 if i in decoding else max(s.length, 1)
+                     for i, s in enumerate(self._slots)),
+                    np.int32, self.batch)
+                fn = self.cache_compiles.get("decode", self.batch,
                                              self._build_decode)
-            next_tok, logits, self.cache = decode(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(lengths))
+                next_tok, logits, self.cache = fn(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(lengths))
+
             self.steps += 1
-            self.decode_calls += 1
+            self.dispatches += 1
             self._occupancy_sum += len(live) / self.batch
             next_np = np.asarray(next_tok)
             logits_np = None if sample is None else np.asarray(logits)
-            for i in live:
+
+            # 3. consume: advance cursors, emit tokens, retire finished rows
+            for i in list(live):
                 slot = self._slots[i]
-                req = slot.req
-                slot.length += 1
-                tok = (int(next_np[i]) if sample is None
-                       else int(sample(logits_np[i])))
-                req.output.append(tok)
-                slot.last_token = tok
-                if (len(req.output) >= req.max_new_tokens or
-                        (self.eos_id is not None and tok == self.eos_id)):
-                    self._finish(req, completed)
-                    self._free_slot(i)
+                if chunks[i]:
+                    slot.pos += chunks[i]
+                    slot.length += chunks[i]
+                    if slot.pos == len(slot.req.prompt):
+                        # final chunk: this row's logits are its first token
+                        tok = (int(next_np[i]) if sample is None
+                               else int(sample(logits_np[i])))
+                        self._emit(i, tok, completed, first=True)
+                elif i in decoding:
+                    slot.length += 1
+                    tok = (int(next_np[i]) if sample is None
+                           else int(sample(logits_np[i])))
+                    self._emit(i, tok, completed, first=False)
         return completed
 
     # -- metrics ---------------------------------------------------------------
 
     @property
     def slot_occupancy(self) -> float:
-        """Mean fraction of slots live per decode step (1.0 = saturated)."""
+        """Mean fraction of slots live per tick (1.0 = saturated)."""
         return self._occupancy_sum / self.steps if self.steps else 0.0
 
     @staticmethod
@@ -267,12 +382,21 @@ class Engine:
                max(r.finished_at - r.first_token_at, 1e-9)
                for r in reqs
                if r.finished_at and r.first_token_at and len(r.output) > 1]
-        return {
+        itl = [dt for r in reqs
+               for dt in np.diff(r.token_times).tolist()]
+        out = {
             "n": len(reqs),
             "total_tokens": float(sum(len(r.output) for r in reqs)),
             "mean_ttft_s": float(np.mean(ttft)) if ttft else float("nan"),
             "mean_tokens_per_s": float(np.mean(tps)) if tps else float("nan"),
         }
+        if ttft:
+            out["ttft_p50_s"] = float(np.percentile(ttft, 50))
+            out["ttft_p99_s"] = float(np.percentile(ttft, 99))
+        if itl:
+            out["itl_p50_s"] = float(np.percentile(itl, 50))
+            out["itl_p99_s"] = float(np.percentile(itl, 99))
+        return out
 
 
 def reference_decode(cfg: ModelConfig, params: Any, prompt: np.ndarray,
@@ -280,28 +404,40 @@ def reference_decode(cfg: ModelConfig, params: Any, prompt: np.ndarray,
                      eos_id: int | None = None,
                      frames: np.ndarray | None = None,
                      compile_cache: CompileCache | None = None) -> list[int]:
-    """Per-request batch-1 greedy decode — the seed engine's inner loop.
+    """Per-request batch-1 greedy decode — the EXACT numerics oracle.
 
-    Kept as (a) the numerics oracle the batched slot engine must match and
-    (b) the baseline ``benchmarks/serving_bench.py`` compares against.
-    Uses the same bucketed left-padded prefill and the same per-row-lengths
-    decode path (``lengths: (1,)``), so outputs are directly comparable.
+    Teacher-forces the prompt through ``api.decode_step`` one token at a
+    time (true positions, true lengths, no pad tokens in the context), so
+    the resulting cache/state is the ground truth for EVERY family —
+    including the post-prompt recurrent state of ssm/hybrid — then decodes
+    greedily.  The chunked engine must match this token-for-token.
     """
+    if len(prompt) > max_len:
+        raise ValueError(f"prompt length {len(prompt)} exceeds {max_len}")
     cc = compile_cache if compile_cache is not None else CompileCache()
-    buckets = TokenBuckets(max_tokens=max_len)
-    bucket = buckets.bucket(len(prompt))
-    pf = cc.get("ref_prefill", bucket, lambda: jax.jit(
-        lambda p, b: api.prefill(cfg, p, b, max_len)))
-    logits, cache = pf(params, _bucketed_prompt_batch(prompt, bucket, frames))
-    out = [int(np.argmax(np.asarray(logits[0])))]
+    if cfg.family == "audio":
+        f = np.asarray(frames)
+        fr = jnp.asarray(f[None] if f.ndim == 2 else f)
+        admit = cc.get("ref_admit", fr.shape[1],
+                       lambda: _admit_executable(cfg, max_len))
+        cache = admit(params, fr)
+    else:
+        cache = api.init_cache(cfg, 1, max_len)
     dec = cc.get("ref_decode", 1, lambda: jax.jit(
         lambda p, c, t, l: api.decode_step(cfg, p, c, t, l)))
-    length = bucket
-    while (len(out) < max_new_tokens and length < max_len and
+    logits = None
+    n_cached = 0
+    for t in np.asarray(prompt).tolist():
+        logits, cache = dec(params, cache,
+                            jnp.asarray([[t]], jnp.int32),
+                            jnp.asarray([n_cached + 1], jnp.int32))
+        n_cached += 1
+    out = [int(np.argmax(np.asarray(logits[0])))]
+    while (len(out) < max_new_tokens and n_cached < max_len and
            (eos_id is None or out[-1] != eos_id)):
-        length += 1
+        n_cached += 1
         logits, cache = dec(params, cache,
                             jnp.asarray([[out[-1]]], jnp.int32),
-                            jnp.asarray([length], jnp.int32))
+                            jnp.asarray([n_cached], jnp.int32))
         out.append(int(np.argmax(np.asarray(logits[0]))))
     return out

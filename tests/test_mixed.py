@@ -1,0 +1,358 @@
+"""Chunked-prefill mixed-step tests: kernel parity, model-level exactness vs
+sequential decode, engine-vs-oracle token parity under chunked admission for
+all four families, chunk-size invariance, and the true-recurrent-prefill
+guarantee for ssm/hybrid."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.compiler import CompileCache, quantize_model
+from repro.kernels import ops
+from repro.kernels.decode_flash import mixed_flash_attention_pallas
+from repro.kernels.xla_attention import (
+    decode_attention_blocked,
+    mixed_attention_blocked,
+)
+from repro.models import api
+from repro.models.attention import quantize_kv
+from repro.serving.engine import Engine, Request, reference_decode
+
+# shared across reference_decode calls so the oracle compiles once per family
+_REF_CC = {}
+
+
+def _oracle_cc(key):
+    return _REF_CC.setdefault(key, CompileCache())
+
+
+def _reqs(cfg, n, rng, *, max_new=(2, 8), lo=3, hi=20, rid0=0):
+    out = []
+    for i in range(n):
+        frames = None
+        if cfg.family == "audio":
+            frames = rng.normal(
+                size=(cfg.encoder_frames, cfg.d_model)).astype(np.float32)
+        out.append(Request(
+            rid=rid0 + i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                int(rng.integers(lo, hi))).astype(np.int32),
+            max_new_tokens=int(rng.integers(*max_new)), frames=frames))
+    return out
+
+
+def _assert_oracle_parity(cfg, params, done, max_len, key):
+    for r in done:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=max_len, frames=r.frames,
+                               compile_cache=_oracle_cc(key))
+        assert r.output == ref, f"req {r.rid} diverged from batch-1 oracle"
+
+
+# ---------------------------------------------------------------------------
+# kernel level
+# ---------------------------------------------------------------------------
+
+class TestMixedAttentionKernels:
+    def _operands(self, *, hq=8, hkv=2, c=16, d=32, max_len=128, quant=False):
+        rng = np.random.default_rng(0)
+        b = 3
+        q = jnp.asarray(rng.normal(size=(b, hq, c, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, hkv, max_len, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, hkv, max_len, d)), jnp.float32)
+        lengths = jnp.asarray([20, 1, 97], jnp.int32)   # incl. chunk
+        q_lens = jnp.asarray([16, 1, 5], jnp.int32)
+        scales = {}
+        if quant:
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            k, v = kq, vq
+            scales = {"k_scale": ks, "v_scale": vs}
+        return q, k, v, lengths, q_lens, scales
+
+    @pytest.mark.parametrize("quant", [False, True])
+    @pytest.mark.parametrize("window", [None, 24])
+    def test_blocked_and_pallas_match_ref(self, window, quant):
+        q, k, v, lengths, q_lens, sc = self._operands(quant=quant)
+        ref = ops.mixed_attention(q, k, v, lengths, q_lens, window=window,
+                                  impl="ref", **sc)
+        xla = mixed_attention_blocked(q, k, v, lengths, q_lens,
+                                      window=window, **sc)
+        pls = mixed_flash_attention_pallas(q, k, v, lengths, q_lens,
+                                           window=window, interpret=True,
+                                           **sc)
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(pls), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_dead_queries_exact_zero(self):
+        q, k, v, lengths, q_lens, _ = self._operands()
+        for out in (mixed_attention_blocked(q, k, v, lengths, q_lens),
+                    mixed_flash_attention_pallas(q, k, v, lengths, q_lens,
+                                                 interpret=True)):
+            np.testing.assert_array_equal(np.asarray(out[2, :, 5:]), 0.0)
+
+    def test_qlen1_bitwise_equals_decode(self):
+        """A chunk of one is literally the decode kernel's contract."""
+        q, k, v, lengths, _, _ = self._operands(c=1)
+        dec = decode_attention_blocked(q, k, v, lengths)
+        mix = mixed_attention_blocked(q, k, v, lengths,
+                                      jnp.ones((3,), jnp.int32))
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(mix))
+
+    def test_mqa_group_packing(self):
+        q, k, v, lengths, q_lens, _ = self._operands(hq=8, hkv=1)
+        ref = ops.mixed_attention(q, k, v, lengths, q_lens, impl="ref")
+        xla = mixed_attention_blocked(q, k, v, lengths, q_lens)
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# model level: mixed_step == sequential decode_step, bit for bit
+# ---------------------------------------------------------------------------
+
+ARCHS = ["qwen-7b", "xlstm-1.3b", "zamba2-7b", "whisper-small"]
+
+
+def _setup_family(arch, **overrides):
+    cfg = get_smoke_config(arch, **overrides)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    batch = {}
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(1, cfg.encoder_frames, cfg.d_model)), jnp.float32)
+    return cfg, params, batch, rng
+
+
+def _seq_feed(cfg, params, cache, toks, start=0):
+    logits = None
+    for t, tok in enumerate(toks):
+        logits, cache = api.decode_step(
+            cfg, params, cache, jnp.asarray([[tok]], jnp.int32),
+            jnp.asarray([start + t + 1], jnp.int32))
+    return logits, cache
+
+
+def _chunk_feed(cfg, params, cache, toks, c, start=0):
+    logits, length = None, start
+    while length - start < len(toks):
+        ql = min(c, len(toks) - (length - start))
+        chunk = np.zeros(c, np.int32)
+        chunk[:ql] = toks[length - start:length - start + ql]
+        logits, cache = api.mixed_step(
+            cfg, params, cache, jnp.asarray(chunk[None]),
+            jnp.asarray([length], jnp.int32), jnp.asarray([ql], jnp.int32))
+        length += ql
+    return logits, cache
+
+
+@pytest.mark.parametrize("arch", ARCHS + ["qwen-7b-int8"])
+def test_mixed_step_equals_sequential_decode(arch):
+    """Chunked admission through mixed_step must reproduce the sequential
+    decode_step cache AND last-token logits exactly — this is what makes
+    the engine's chunk path oracle-safe, and for ssm/hybrid it IS the
+    true-recurrent-prefill guarantee."""
+    overrides = {"kv_quant": "int8"} if arch.endswith("-int8") else {}
+    cfg, params, batch, rng = _setup_family(arch.removesuffix("-int8"),
+                                            **overrides)
+    prompt = rng.integers(0, cfg.vocab_size, 13).astype(np.int32)
+    row0 = api.request_cache(cfg, params, batch, 32)
+    sl, scache = _seq_feed(cfg, params, row0, prompt)
+    ml, mcache = _chunk_feed(cfg, params, row0, prompt, c=8)
+    np.testing.assert_array_equal(np.asarray(sl), np.asarray(ml))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), scache, mcache)
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "zamba2-7b"])
+def test_true_recurrent_prefill(arch):
+    """ssm/hybrid chunked admission materializes the POST-PROMPT state (the
+    PR 1 forward-as-prefill gap): continuations condition on the prompt —
+    two prompts sharing their last token diverge afterwards."""
+    cfg, params, batch, rng = _setup_family(arch)
+    p1 = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    p2 = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    p2[-1] = p1[-1]                     # same last token, different prefix
+    row0 = api.request_cache(cfg, params, batch, 32)
+    _, c1 = _chunk_feed(cfg, params, row0, p1, c=8)
+    _, c2 = _chunk_feed(cfg, params, row0, p2, c=8)
+    fresh = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))), c1, row0)))
+    diverged = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))), c1, c2)))
+    assert fresh > 0, "post-prompt state must differ from the fresh state"
+    assert diverged > 0, "state must depend on the full prompt, not its tail"
+    # and the continuation tokens themselves differ through the engine path
+    o1 = reference_decode(cfg, params, p1, 4, max_len=32,
+                          frames=None, compile_cache=_oracle_cc(arch))
+    o2 = reference_decode(cfg, params, p2, 4, max_len=32,
+                          frames=None, compile_cache=_oracle_cc(arch))
+    assert o1 != o2
+
+
+def test_chunk_size_invariance():
+    """C=4 vs C=8 vs C=13 (!= power of two) give identical logits/cache."""
+    cfg, params, batch, rng = _setup_family("qwen-7b")
+    prompt = rng.integers(0, cfg.vocab_size, 26).astype(np.int32)
+    row0 = api.request_cache(cfg, params, batch, 64)
+    outs = [_chunk_feed(cfg, params, row0, prompt, c=c) for c in (4, 8, 13)]
+    for logits, cache in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0][0]),
+                                      np.asarray(logits))
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), outs[0][1], cache)
+
+
+def test_mixed_step_idle_rows_untouched():
+    """q_lens == 0 rows must not move: cache unchanged even at the MAX
+    boundary (the clamped-write hazard the roll-merge write guards)."""
+    cfg, params, _, rng = _setup_family("qwen-7b")
+    max_len = 32
+    cache = api.init_cache(cfg, 2, max_len)
+    # fill row 1 to the brim so a naive C-wide dynamic_update_slice at its
+    # length would clamp backwards over valid KV
+    prompt = rng.integers(0, cfg.vocab_size, max_len).astype(np.int32)
+    full = jnp.asarray(np.stack([np.zeros(max_len, np.int32), prompt]))
+    _, cache = api.mixed_step(cfg, params, cache, full,
+                              jnp.asarray([0, 0], jnp.int32),
+                              jnp.asarray([0, max_len], jnp.int32))
+    before = jax.tree.map(lambda a: np.asarray(a).copy(), cache)
+    tokens = np.zeros((2, 8), np.int32)
+    tokens[0, :3] = prompt[:3]
+    _, after = api.mixed_step(cfg, params, cache, jnp.asarray(tokens),
+                              jnp.asarray([0, max_len], jnp.int32),
+                              jnp.asarray([3, 0], jnp.int32))
+
+    def row1_unchanged(b4, a):
+        np.testing.assert_array_equal(np.asarray(a)[:, 1], b4[:, 1])
+    jax.tree.map(row1_unchanged, before, after)
+
+
+# ---------------------------------------------------------------------------
+# engine level: chunked admission, all four families
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ARCHS + ["qwen-7b-int8"])
+def test_engine_chunked_admission_matches_oracle(arch):
+    """Engine output token-for-token equal to the sequential batch-1 oracle
+    under chunked admission, for every family (incl. int8-KV), with compile
+    misses bounded by n_chunk_buckets + 2 (+1 audio encode)."""
+    overrides = {"kv_quant": "int8"} if arch.endswith("-int8") else {}
+    cfg, params, _, rng = _setup_family(arch.removesuffix("-int8"),
+                                        **overrides)
+    engine = Engine(cfg, params, batch_size=2, max_len=32, chunk_size=8)
+    for r in _reqs(cfg, 5, rng):
+        engine.submit(r)
+    done = engine.run()
+    assert len(done) == 5 and all(r.done for r in done)
+    assert engine.dispatches == engine.steps   # one dispatch per tick
+    assert engine.cache_compiles.misses <= engine.compile_budget
+    _assert_oracle_parity(cfg, params, done, 32, arch)
+
+
+def test_engine_chunk_size_invariance():
+    """C=4 and C=16 engines emit identical tokens (schedule-independent)."""
+    cfg, params, _, rng = _setup_family("qwen-7b")
+    outs = []
+    for c in (4, 16):
+        engine = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=c)
+        rng_c = np.random.default_rng(7)
+        for r in _reqs(cfg, 6, rng_c, hi=40):
+            engine.submit(r)
+        done = engine.run()
+        outs.append({r.rid: r.output for r in done})
+    assert outs[0] == outs[1]
+
+
+def test_engine_true_length_accounting():
+    """Satellite regression: slots track TRUE lengths (cache occupancy ==
+    real token count), never the padded bucket the old engine stored — so a
+    10-token prompt in a 16-slot cache decodes 16-10+1 = 7 tokens instead
+    of dying at admission (its bucket was 16) and never attends over pads."""
+    cfg, params, _, rng = _setup_family("qwen-7b")
+    engine = Engine(cfg, params, batch_size=1, max_len=16, chunk_size=8)
+    prompt = rng.integers(0, cfg.vocab_size, 10).astype(np.int32)
+    engine.submit(Request(rid=0, prompt=prompt, max_new_tokens=100))
+    assert engine.run(max_steps=1) == []
+    assert engine._slots[0].length == 8          # first chunk, true cursor
+    done = engine.run()
+    assert engine._slots[0].req is None
+    # decode fills the cache to EXACTLY max_len true tokens then retires:
+    # prompt(10) + 6 generated-and-cached + 1 final pending = 7 out
+    assert len(done[0].output) == 16 - 10 + 1
+    _assert_oracle_parity(cfg, params, done, 16, "truelen")
+
+
+def test_engine_admits_prompts_up_to_max_len():
+    """Satellite regression: the old engine dropped prompts whose BUCKET hit
+    max_len even though real cache room remained.  True-length admission
+    decodes them in full; a prompt of exactly max_len still finishes at its
+    first token (no room to decode into) and matches the oracle."""
+    cfg, params, _, rng = _setup_family("qwen-7b")
+    engine = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16)
+    p_bucket = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)  # b=64
+    p_full = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)
+    engine.submit(Request(rid=0, prompt=p_bucket, max_new_tokens=5))
+    engine.submit(Request(rid=1, prompt=p_full, max_new_tokens=5))
+    done = {r.rid: r for r in engine.run()}
+    assert len(done[0].output) == 5      # old engine finished this at 1
+    assert len(done[1].output) == 1      # genuinely no room past max_len
+    _assert_oracle_parity(cfg, params, done.values(), 64, "admit")
+    with pytest.raises(ValueError, match="exceeds engine max_len"):
+        engine.submit(Request(rid=2, prompt=np.zeros(65, np.int32)))
+
+
+def test_engine_stall_policy_matches_mixed_tokens():
+    """The stall-prefill baseline is a SCHEDULE, not different numerics:
+    same tokens, strictly more ticks (decode rows stall during admission)."""
+    cfg, params, _, _ = _setup_family("qwen-7b")
+    outs, steps = [], []
+    for policy in ("mixed", "stall"):
+        engine = Engine(cfg, params, batch_size=3, max_len=64, chunk_size=8,
+                        prefill_policy=policy)
+        rng = np.random.default_rng(3)
+        for r in _reqs(cfg, 6, rng, hi=40, max_new=(4, 9)):
+            engine.submit(r)
+        done = engine.run()
+        outs.append({r.rid: r.output for r in done})
+        steps.append(engine.steps)
+    assert outs[0] == outs[1]
+    assert steps[1] > steps[0]       # head-of-line blocking costs ticks
+
+
+def test_engine_prefill_token_budget():
+    """Sarathi budget caps chunk tokens per tick but never starves a tick
+    (at least one admission row always advances); outputs are unchanged."""
+    cfg, params, _, _ = _setup_family("qwen-7b")
+    outs = []
+    for budget in (None, 8):
+        engine = Engine(cfg, params, batch_size=3, max_len=64, chunk_size=8,
+                        prefill_token_budget=budget)
+        rng = np.random.default_rng(4)
+        for r in _reqs(cfg, 5, rng, hi=40):
+            engine.submit(r)
+        done = engine.run()
+        outs.append({r.rid: r.output for r in done})
+    assert outs[0] == outs[1]
+
+
+def test_quantized_params_engine_parity():
+    """W4A16 weights + chunked admission + int8 KV all at once."""
+    cfg = get_smoke_config("qwen-7b", d_model=128, d_ff=256, vocab_size=512,
+                           kv_quant="int8")
+    params = quantize_model(api.init_params(cfg, jax.random.PRNGKey(0)),
+                            "dense")
+    rng = np.random.default_rng(5)
+    engine = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16)
+    for r in _reqs(cfg, 4, rng, hi=40):
+        engine.submit(r)
+    done = engine.run()
+    assert len(done) == 4
+    _assert_oracle_parity(cfg, params, done, 64, "w4a16-int8")
