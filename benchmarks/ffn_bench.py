@@ -1,0 +1,195 @@
+"""FFN datapath benchmark: unfused 3-matmul MLP vs the fused FFN operator,
+with modeled HBM bytes per step.
+
+The FFN is the weight-bound half of decode (the attention half was rebuilt
+in PR 2): at small token counts every step streams the full gate/up/down
+weights, and the unfused composition additionally bounces two full
+``(tokens, d_ff)`` intermediates plus the activation product through memory
+and re-streams the activations per projection.  The fused operator
+(``ops.ffn_w4a16``) moves ``W + x + out`` bytes — the hidden state never
+leaves VMEM — and with a tile-uniform sparse down projection it skips
+dropped hidden tiles *and their gate/up weight streams* entirely (§III-C's
+compute-and-bytes-shrink-together property).
+
+Swept: tokens × strategy ∈ {dense-w4, sparse-0.5, sparse-0.25} × {unfused,
+fused}.  Wall time on CPU measures the blocked-XLA twin (the CPU/dry-run
+hot path) against the unfused oracle composition; modeled bytes carry the
+TPU story (the Pallas kernel's DMA schedule).
+
+``--smoke`` writes BENCH_ffn.json (CI trend record, uploaded next to
+BENCH_decode.json / BENCH_serving.json).
+
+Run: PYTHONPATH=src python benchmarks/ffn_bench.py [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import GROUP_SIZE, quantize
+from repro.core.sparsity import block_sparsify_quantize
+from repro.kernels import ops
+
+STRATEGIES = ("dense-w4", "sparse-0.5", "sparse-0.25")
+
+
+def make_weights(d: int, f: int, strategy: str, seed: int = 0):
+    """gate/up (d, f), down (f, d) packed per the sweep strategy.
+
+    Sparse strategies prune gate/up per-out-tile (the standalone kernel's
+    layout) and down tile-uniform (the fused kernel's down-gather layout)."""
+    rng = np.random.default_rng(seed)
+
+    def r(shape):
+        return jnp.asarray(rng.normal(0, 0.03, shape).astype(np.float32))
+
+    wg, wu, wd = r((d, f)), r((d, f)), r((f, d))
+    if strategy == "dense-w4":
+        return quantize(wg), quantize(wu), quantize(wd)
+    density = float(strategy.split("-")[1])
+
+    def sparsify(w, tile_uniform=False):
+        n_blocks = w.shape[0] // 128
+        for m in (8, 4, 2):  # largest group the contraction axis tiles
+            if n_blocks % m == 0 and round(density * m) >= 1:
+                return block_sparsify_quantize(
+                    w, density, blocks_per_group=m, tile_uniform=tile_uniform)
+        raise ValueError(f"in_features {w.shape[0]} untileable at {density}")
+
+    return sparsify(wg), sparsify(wu), sparsify(wd, tile_uniform=True)
+
+
+def modeled_bytes_per_step(tokens: int, d: int, f: int, gate, up, down,
+                           fused: bool, elt: int = 2) -> int:
+    """Modeled HBM bytes one FFN application moves.
+
+    unfused: weights + x streamed twice (gate and up each read it) + the
+    hidden-state round trips (write h_gate, write h_up, read both for the
+    activation product, write h, read h for down = 6·tokens·d_ff·elt) + out.
+
+    fused: weights + x once (resident block) + out — no hidden traffic.
+    With a tile-uniform sparse down, only the down-kept fraction of the
+    gate/up weight stream (and of the hidden compute) exists at all."""
+    x_bytes = tokens * d * elt
+    out_bytes = tokens * d * elt
+    w_gate_up = gate.nbytes_model + up.nbytes_model
+    w_down = down.nbytes_model
+    if not fused:
+        hidden = 6 * tokens * f * elt
+        return w_gate_up + w_down + 2 * x_bytes + hidden + out_bytes
+    keep = 1.0
+    if getattr(down, "tile_uniform", False):
+        keep = down.kept_blocks / (f // GROUP_SIZE)
+    return int(w_gate_up * keep) + w_down + x_bytes + out_bytes
+
+
+def _timeit(fn, *args, iters: int = 10, repeats: int = 3) -> float:
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e6
+
+
+def bench_cells(d: int = 1024, f: int = 4096, tokens=(1, 8, 64),
+                strategies=STRATEGIES, iters: int = 10) -> list[dict]:
+    cells = []
+    fns = {
+        "unfused": jax.jit(functools.partial(
+            ops.ffn_w4a16, activation="swiglu", impl="ref")),
+        "fused": jax.jit(functools.partial(
+            ops.ffn_w4a16, activation="swiglu", impl="xla")),
+    }
+    rng = np.random.default_rng(1)
+    for strategy in strategies:
+        gate, up, down = make_weights(d, f, strategy)
+        for t in tokens:
+            x = jnp.asarray(rng.normal(0, 1, (t, d)).astype(np.float32)
+                            ).astype(jnp.bfloat16)
+            for impl in ("unfused", "fused"):
+                us = _timeit(fns[impl], x, gate, up, down, iters=iters)
+                cells.append({
+                    "tokens": t, "d_model": d, "d_ff": f,
+                    "strategy": strategy, "impl": impl,
+                    "us_per_step": round(us, 1),
+                    "modeled_bytes_per_step": modeled_bytes_per_step(
+                        t, d, f, gate, up, down, fused=(impl == "fused")),
+                })
+    return cells
+
+
+def byte_and_time_ratios(cells: list[dict]) -> dict[str, float]:
+    """unfused/fused ratios at the decode shape (tokens = min swept)."""
+    t = min(c["tokens"] for c in cells)
+    pick = {(c["strategy"], c["impl"]): c for c in cells if c["tokens"] == t}
+    out = {}
+    for s in {c["strategy"] for c in cells}:
+        u, fu = pick[(s, "unfused")], pick[(s, "fused")]
+        out[f"bytes_unfused_over_fused_{s}"] = round(
+            u["modeled_bytes_per_step"] / fu["modeled_bytes_per_step"], 3)
+        out[f"time_unfused_over_fused_{s}"] = round(
+            u["us_per_step"] / fu["us_per_step"], 3)
+    return out
+
+
+def run_smoke(path: str = "BENCH_ffn.json") -> dict:
+    """CI entry: small sweep -> one JSON trend record."""
+    cells = bench_cells(d=512, f=2048, tokens=(1, 8), iters=5)
+    report = {
+        "bench": "ffn_fused",
+        "cells": cells,
+        "ratios": byte_and_time_ratios(cells),
+    }
+    with open(path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(json.dumps(report["ratios"], indent=2))
+    print(f"wrote {path}")
+    return report
+
+
+def rows() -> list[tuple[str, float, str]]:
+    """benchmarks.run driver entry."""
+    cells = bench_cells(d=512, f=2048, tokens=(1, 64), iters=5)
+    out = []
+    for c in cells:
+        name = f"ffn/{c['strategy']}_{c['impl']}_t{c['tokens']}"
+        out.append((name, c["us_per_step"],
+                    f"bytes={c['modeled_bytes_per_step']}"))
+    return out
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep -> BENCH_ffn.json (CI trend record)")
+    ap.add_argument("--out", default="BENCH_ffn.json")
+    ap.add_argument("--d-model", type=int, default=1024)
+    ap.add_argument("--d-ff", type=int, default=4096)
+    ap.add_argument("--tokens", default="1,8,64")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run_smoke(args.out)
+        return
+    tokens = tuple(int(t) for t in args.tokens.split(","))
+    cells = bench_cells(d=args.d_model, f=args.d_ff, tokens=tokens)
+    print(f"{'strategy':>12} {'tok':>5} {'impl':>8} {'us/step':>9} "
+          f"{'bytes/step':>12}")
+    for c in cells:
+        print(f"{c['strategy']:>12} {c['tokens']:>5} {c['impl']:>8} "
+              f"{c['us_per_step']:>9.1f} {c['modeled_bytes_per_step']:>12}")
+    print(json.dumps(byte_and_time_ratios(cells), indent=2))
+
+
+if __name__ == "__main__":
+    main()

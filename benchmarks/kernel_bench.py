@@ -1,7 +1,14 @@
-"""Kernel micro-benchmarks: wall time of the jitted XLA ops on this host
-(CPU) + derived model quantities.  Pallas kernels run in interpret mode on
-CPU, so wall times are only meaningful for the XLA paths; the derived
-column carries the TPU-roofline projection instead.
+"""Kernel micro-benchmarks: wall time of the jitted ops on this host (CPU)
++ derived model quantities, with the executed impl labeled explicitly.
+
+Two impl rows per W4A16 op:
+
+* ``[xla]``              — the pure-XLA path (the CPU/dry-run hot path);
+  its wall time is the meaningful one on this host.
+* ``[pallas-interpret]`` — the Pallas kernel under the interpreter (the
+  numerics path CI exercises; the grid runs as a Python loop, so the wall
+  time is NOT a TPU prediction — the derived v5e memory-bound projection
+  carries the TPU story for both rows).
 """
 
 from __future__ import annotations
@@ -35,22 +42,42 @@ def rows() -> list[tuple[str, float, str]]:
     qt = quantize(w)
     st = block_sparsify_quantize(w, 0.25)
 
-    us = _time(jax.jit(lambda a, q: ops.w4a16_matmul(a, q, impl="xla")), x, qt)
     # TPU v5e projection: memory-bound decode time = bytes / 819 GB/s
     t_mem = qt.nbytes_model / 819e9 * 1e6
-    out.append(("kernel/w4a16_matmul_2048x2048", us,
-                f"v5e_mem_bound={t_mem:.2f}us int4_bytes={qt.nbytes_model}"))
+    derived = f"v5e_mem_bound={t_mem:.2f}us int4_bytes={qt.nbytes_model}"
+    us = _time(jax.jit(lambda a, q: ops.w4a16_matmul(a, q, impl="xla")), x, qt)
+    out.append(("kernel/w4a16_matmul_2048x2048[xla]", us, derived))
+    us = _time(jax.jit(lambda a, q: ops.w4a16_matmul(a, q, impl="pallas")),
+               x, qt, iters=2)
+    out.append(("kernel/w4a16_matmul_2048x2048[pallas-interpret]", us,
+                derived + " interpret=1"))
 
-    us = _time(jax.jit(lambda a, s: ops.sparse_w4a16_matmul(a, s, impl="xla")), x, st)
     t_mem_s = st.nbytes_model / 819e9 * 1e6
-    out.append(("kernel/sparse_w4a16_d0.25", us,
-                f"v5e_mem_bound={t_mem_s:.2f}us bytes={st.nbytes_model} "
-                f"vs_dense={qt.nbytes_model / st.nbytes_model:.2f}x"))
+    derived_s = (f"v5e_mem_bound={t_mem_s:.2f}us bytes={st.nbytes_model} "
+                 f"vs_dense={qt.nbytes_model / st.nbytes_model:.2f}x")
+    us = _time(jax.jit(lambda a, s: ops.sparse_w4a16_matmul(a, s, impl="xla")), x, st)
+    out.append(("kernel/sparse_w4a16_d0.25[xla]", us, derived_s))
+    us = _time(jax.jit(lambda a, s: ops.sparse_w4a16_matmul(a, s, impl="pallas")),
+               x, st, iters=2)
+    out.append(("kernel/sparse_w4a16_d0.25[pallas-interpret]", us,
+                derived_s + " interpret=1"))
+
+    # whole-FFN operator: unfused oracle vs fused twin (decode shape)
+    x1 = x[:1]
+    gq, uq, dq = quantize(w), quantize(w), quantize(w)
+    ffn_bytes = gq.nbytes_model + uq.nbytes_model + dq.nbytes_model
+    derived_f = f"w_bytes={ffn_bytes} v5e_mem_bound={ffn_bytes / 819e9 * 1e6:.2f}us"
+    us = _time(jax.jit(lambda a, g, u, d: ops.ffn_w4a16(
+        a, g, u, d, activation="swiglu", impl="ref")), x1, gq, uq, dq)
+    out.append(("kernel/ffn_w4a16_2048_t1[unfused-xla]", us, derived_f))
+    us = _time(jax.jit(lambda a, g, u, d: ops.ffn_w4a16(
+        a, g, u, d, activation="swiglu", impl="xla")), x1, gq, uq, dq)
+    out.append(("kernel/ffn_w4a16_2048_t1[fused-xla]", us, derived_f))
 
     q = jnp.asarray(rng.normal(0, 1, (1, 8, 2048, 128)).astype(np.float32)).astype(jnp.bfloat16)
     us = _time(jax.jit(lambda a: ops.attention(a, a, a, causal=True, impl="xla")), q)
     flops = 4 * 8 * 2048 * 2048 * 128 / 2
-    out.append(("kernel/attention_2k_causal", us,
+    out.append(("kernel/attention_2k_causal[xla]", us,
                 f"v5e_compute_bound={flops / 197e12 * 1e6:.2f}us"))
     return out
 

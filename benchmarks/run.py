@@ -19,6 +19,7 @@ MODULES = [
     "kernel_bench",
     "serving_bench",
     "decode_bench",
+    "ffn_bench",
 ]
 
 
@@ -28,14 +29,16 @@ def main() -> None:
                     help="comma-separated module substrings")
     ap.add_argument("--smoke", action="store_true",
                     help="perf smoke -> BENCH_decode.json + BENCH_serving.json"
-                         ", then exit (the CI trend records)")
+                         " + BENCH_ffn.json, then exit (the CI trend records)")
     args = ap.parse_args()
 
     if args.smoke:
         from benchmarks.decode_bench import run_smoke
+        from benchmarks.ffn_bench import run_smoke as ffn_smoke
         from benchmarks.serving_bench import run_smoke as serving_smoke
         run_smoke()
         serving_smoke()
+        ffn_smoke()
         return
 
     selected = MODULES

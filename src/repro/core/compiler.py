@@ -77,10 +77,15 @@ def _leaf_name(path) -> str:
     return ""
 
 
-def _quantize_2d(w, density: float, shard_groups: int | None = None):
+def _quantize_2d(w, density: float, shard_groups: int | None = None,
+                 tile_uniform: bool = False):
     """shard_groups: make (in_features // group_size) divisible by this —
     required when the contraction axis is TP-sharded at serve time (MoE
-    experts under shard_map); smaller groups cost a few extra scale bits."""
+    experts under shard_map); smaller groups cost a few extra scale bits.
+
+    tile_uniform: rank sparse kept-blocks across ALL output channels (one
+    kept set per contraction block) — the layout the fused FFN kernel's
+    down-projection gather consumes (see ``kernels/ffn_fused.py``)."""
     in_f, out_f = w.shape
     group = GROUP_SIZE
     if shard_groups:
@@ -96,7 +101,8 @@ def _quantize_2d(w, density: float, shard_groups: int | None = None):
     if in_f % 128 == 0:
         for m in (BLOCKS_PER_GROUP, 4, 2):
             if n_blocks % m == 0 and round(density * m) >= 1:
-                return block_sparsify_quantize(w, density, blocks_per_group=m)
+                return block_sparsify_quantize(w, density, blocks_per_group=m,
+                                               tile_uniform=tile_uniform)
     return quantize(w, group_size=group)
 
 
@@ -127,8 +133,12 @@ def quantize_model(params: Any, strategy: str | dict = "dense") -> Any:
         # MoE expert contractions are TP-sharded at serve time: keep their
         # quant-group count divisible by the model-axis size (16)
         shard_groups = 16 if "moe" in names else None
+        # the FFN down projection contracts over d_ff — the axis the fused
+        # FFN kernel walks; a tile-uniform kept set lets it skip dropped
+        # hidden tiles (and their gate/up weight streams) outright
         fn = functools.partial(_quantize_2d, density=density,
-                               shard_groups=shard_groups)
+                               shard_groups=shard_groups,
+                               tile_uniform=(kind == "4h_to_h"))
         for _ in range(leaf.ndim - 2):
             fn = jax.vmap(fn)
         return fn(leaf)

@@ -186,6 +186,12 @@ class SparseQuantizedTensor:
                                                    ascending - this IS the
                                                    paper's address-in-block
                                                    encoding at block scale
+
+    ``tile_uniform`` (static metadata) marks a tensor whose kept set is the
+    SAME for every out tile (every ``block_idx`` row identical) — required
+    by the fused FFN kernel's down-projection gather, which visits kept
+    f-blocks once for ALL output channels.  Such a tensor only really needs
+    one index row (the nbytes model keeps the shared layout for simplicity).
     """
 
     packed: jax.Array
@@ -194,16 +200,18 @@ class SparseQuantizedTensor:
     shape: tuple[int, int]
     density: float
     group_size: int = GROUP_SIZE
+    tile_uniform: bool = False
 
     def tree_flatten(self):
         return (self.packed, self.scales, self.block_idx), (
-            self.shape, self.density, self.group_size)
+            self.shape, self.density, self.group_size, self.tile_uniform)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         packed, scales, block_idx = children
-        shape, density, group_size = aux
-        return cls(packed, scales, block_idx, shape, density, group_size)
+        shape, density, group_size, tile_uniform = aux
+        return cls(packed, scales, block_idx, shape, density, group_size,
+                   tile_uniform)
 
     @property
     def in_features(self) -> int:
@@ -241,12 +249,19 @@ def block_sparsify_quantize(
     density: float,
     blocks_per_group: int = BLOCKS_PER_GROUP,
     scale_dtype=jnp.bfloat16,
+    tile_uniform: bool = False,
 ) -> SparseQuantizedTensor:
     """Magnitude-prune to log-scale block sparsity, then block-quantize.
 
     Keeps the top ``k = density * 8`` blocks (by L1 mass) out of every 8
     adjacent 128-channel blocks, per 128-wide output tile, then quantizes the
     survivors with per-block scales.
+
+    ``tile_uniform=True`` ranks block importance summed across ALL out tiles
+    so every tile keeps the same blocks — slightly coarser selection, but the
+    kept set becomes a property of the contraction axis alone, which is what
+    lets the fused FFN kernel skip whole hidden tiles the down projection
+    dropped (and their gate/up weight streams with them).
     """
     in_f, out_f = w.shape
     block = GROUP_SIZE
@@ -263,6 +278,8 @@ def block_sparsify_quantize(
     out_tiles = out_f // block
 
     imp = block_importance(w)                       # (n_blocks, out_tiles)
+    if tile_uniform:
+        imp = jnp.broadcast_to(imp.sum(axis=1, keepdims=True), imp.shape)
     imp_g = imp.reshape(n_groups, blocks_per_group, out_tiles)
     # top-k blocks per group, ascending absolute index per out tile
     order = jnp.argsort(-imp_g, axis=1)[:, :k, :]   # (n_groups, k, out_tiles)
@@ -292,6 +309,7 @@ def block_sparsify_quantize(
         block_idx=block_idx,
         shape=(in_f, out_f),
         density=float(density),
+        tile_uniform=tile_uniform,
     )
 
 

@@ -16,7 +16,6 @@ models only ever call these wrappers.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor
 from repro.core.sparsity import SparseQuantizedTensor
@@ -26,7 +25,7 @@ from repro.kernels.pallas_compat import default_interpret
 from repro.kernels.sparse_w4a16 import sparse_w4a16_matmul_pallas
 from repro.kernels.w4a16_matmul import w4a16_matmul_pallas
 
-__all__ = ["w4a16_matmul", "sparse_w4a16_matmul", "attention",
+__all__ = ["w4a16_matmul", "sparse_w4a16_matmul", "ffn_w4a16", "attention",
            "decode_attention", "mixed_attention"]
 
 # one backend probe for the whole package: the kernels resolve their
@@ -55,24 +54,74 @@ def sparse_w4a16_matmul(
     if impl == "xla":
         # gather-then-dense-dot: same block gather the kernel does, expressed
         # as XLA take + einsum (keeps the sparse byte/FLOP savings visible to
-        # cost_analysis)
-        in_f, out_f = st.shape
-        g = st.group_size
-        *lead, tokens, _ = x.shape
-        xb = x.reshape(-1, in_f // g, g)
-        # unpack kept blocks
-        lo = (st.packed & 0xF).astype(jnp.int8)
-        hi = (st.packed >> 4).astype(jnp.int8)
-        lo = jnp.where(lo >= 8, lo - 16, lo)
-        hi = jnp.where(hi >= 8, hi - 16, hi)
-        w = jnp.concatenate([lo, hi], axis=2).astype(jnp.bfloat16)  # (T,S,128,128)
-        xg = jnp.take(xb, st.block_idx, axis=1)          # (N, T, S, 128)
-        part = jnp.einsum("ntsg,tsgo->ntso", xg.astype(jnp.float32),
-                          w.astype(jnp.float32),
-                          preferred_element_type=jnp.float32)
-        out = (part * st.scales.astype(jnp.float32)[None]).sum(axis=2)
-        out = out.reshape(xb.shape[0], out_f)
-        return out.astype(x.dtype).reshape(*lead, tokens, out_f)
+        # cost_analysis); shared with the fused-FFN twin
+        from repro.kernels.ffn_fused import sparse_matmul_f32
+        return sparse_matmul_f32(x, st).astype(x.dtype)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def ffn_w4a16(
+    x: jax.Array,
+    gate,
+    up,
+    down,
+    *,
+    activation: str = "swiglu",
+    up_bias: jax.Array | None = None,
+    down_bias: jax.Array | None = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Whole FFN — ``down( act(x@gate) * (x@up) )`` — as ONE operator.
+
+    Weights may be dense arrays, ``QuantizedTensor``s (W4A16) or
+    ``SparseQuantizedTensor``s (log-scale sparse); ``activation`` is
+    swiglu/geglu (gated) or gelu (ungated, optional biases).
+
+    * ``impl="pallas"`` — the fused kernel (``kernels/ffn_fused.py``): one
+      dispatch per MLP, the ``(tokens, d_ff)`` hidden state never leaves
+      VMEM.  Falls back to the twin for operand mixes the kernel doesn't
+      tile (non-128 quant groups, non-tile-uniform sparse down, ...).
+    * ``impl="xla"``    — the blocked twin: same numerics contract
+      (f32 scale-after-dot per quant group, f32 activation), no 16-bit
+      weight materialization.  The hot path on CPU and in the dry run.
+      Plain 16-bit weights keep the seed's exact unfused composition.
+    * ``impl="ref"``    — the unfused 3-matmul oracle.
+    """
+    if impl == "auto":
+        impl = "pallas" if _ON_TPU else "xla"
+    gated = activation in ("swiglu", "geglu")
+    if gated and (up_bias is not None or down_bias is not None):
+        raise ValueError("gated activations take no FFN biases")
+    ws = (gate, up, down) if gated else (up, down)
+    quantized = any(
+        isinstance(w, (QuantizedTensor, SparseQuantizedTensor)) for w in ws)
+    if impl == "ref" or (impl == "xla" and not quantized):
+        return _ref.ffn_ref(x, gate, up, down, activation=activation,
+                            up_bias=up_bias, down_bias=down_bias)
+    from repro.kernels import ffn_fused
+    if impl == "pallas":
+        variant = ffn_fused.fused_variant(
+            x, gate, up, down, activation, up_bias, down_bias)
+        if variant == "quant":
+            return ffn_fused.ffn_fused_w4a16_pallas(
+                x, gate if gated else None, up, down, activation=activation,
+                up_bias=up_bias, down_bias=down_bias)
+        if variant == "sparse":
+            return ffn_fused.ffn_fused_sparse_pallas(
+                x, gate if gated else None, up, down, activation=activation,
+                up_bias=up_bias, down_bias=down_bias)
+        if variant == "fp":
+            return ffn_fused.ffn_fused_dense_pallas(
+                x, gate if gated else None, up, down, activation=activation,
+                up_bias=up_bias, down_bias=down_bias)
+        impl = "xla"
+    if impl == "xla":
+        if not quantized:
+            return _ref.ffn_ref(x, gate, up, down, activation=activation,
+                                up_bias=up_bias, down_bias=down_bias)
+        return ffn_fused.ffn_w4a16_xla(
+            x, gate, up, down, activation=activation,
+            up_bias=up_bias, down_bias=down_bias)
     raise ValueError(f"unknown impl {impl!r}")
 
 

@@ -20,6 +20,18 @@ def default_interpret() -> bool:
     """True (interpret mode) unless a TPU backend is attached."""
     return not any(d.platform == "tpu" for d in jax.devices())
 
+
+def token_block(n_tok: int, block_tokens: int) -> int:
+    """Decode-shaped token-block size for the matmul-family kernels.
+
+    A batch-1 decode step carries ONE live token row; the old
+    ``min(block_tokens, max(8, n_tok))`` rule padded it to an 8-row block —
+    8x wasted activation DMA and MXU issue on the serving hot path.  Small
+    token counts now get an exact-fit block (no padding at all up to
+    ``block_tokens``); only prefill-sized calls tile at ``block_tokens`` and
+    pad the remainder."""
+    return n_tok if n_tok <= block_tokens else block_tokens
+
 try:
     CompilerParams = pltpu.CompilerParams
 except AttributeError:

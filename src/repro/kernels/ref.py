@@ -17,6 +17,7 @@ from repro.core.sparsity import SparseQuantizedTensor, sparse_dequantize
 __all__ = [
     "w4a16_matmul_ref",
     "sparse_w4a16_matmul_ref",
+    "ffn_ref",
     "attention_ref",
     "decode_attention_ref",
     "mixed_attention_ref",
@@ -69,6 +70,49 @@ def sparse_w4a16_matmul_ref(x: jax.Array, st: SparseQuantizedTensor) -> jax.Arra
         preferred_element_type=jnp.float32)
     out = (partial * scales_full).sum(axis=-2)
     return out.astype(x.dtype)
+
+
+def ffn_ref(
+    x: jax.Array,
+    gate,
+    up,
+    down,
+    *,
+    activation: str = "swiglu",
+    up_bias: jax.Array | None = None,
+    down_bias: jax.Array | None = None,
+) -> jax.Array:
+    """UNFUSED FFN oracle: three independent matmuls + XLA elementwise ops.
+
+    Exactly the seed's ``mlp_apply`` composition (per-weight-type dispatch,
+    activations in the compute dtype) — the numerics ground truth AND the
+    bandwidth baseline ``benchmarks/ffn_bench.py`` measures the fused
+    datapath against."""
+
+    def mm(x_, w, b=None):
+        if isinstance(w, QuantizedTensor):
+            y = w4a16_matmul_ref(x_, w)
+        elif isinstance(w, SparseQuantizedTensor):
+            y = sparse_w4a16_matmul_ref(x_, w)
+        else:
+            ww = w.astype(x_.dtype) if w.dtype != x_.dtype else w
+            y = jax.lax.dot_general(
+                x_, ww, (((x_.ndim - 1,), (0,)), ((), ())))
+            y = y.astype(x_.dtype)
+        if b is not None:
+            y = y + b.astype(y.dtype)
+        return y
+
+    if activation == "swiglu":
+        h = jax.nn.silu(mm(x, gate)) * mm(x, up)
+        return mm(h, down)
+    if activation == "geglu":
+        h = jax.nn.gelu(mm(x, gate), approximate=True) * mm(x, up)
+        return mm(h, down)
+    if activation == "gelu":
+        h = jax.nn.gelu(mm(x, up, up_bias), approximate=True)
+        return mm(h, down, down_bias)
+    raise ValueError(f"unknown activation {activation!r}")
 
 
 def attention_ref(

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.pallas_compat import CompilerParams, default_interpret
+from repro.kernels.pallas_compat import (
+    CompilerParams, default_interpret, token_block)
 
 from repro.core.quant import GROUP_SIZE
 from repro.core.sparsity import SparseQuantizedTensor
@@ -91,7 +92,7 @@ def sparse_w4a16_matmul_pallas(
         raise ValueError(f"contraction mismatch {xin} vs {in_f}")
     x2 = x.reshape(-1, in_f)
     n_tok = x2.shape[0]
-    bt = min(block_tokens, max(8, n_tok))
+    bt = token_block(n_tok, block_tokens)  # exact fit at decode, no 8-row pad
     pad = (-n_tok) % bt
     if pad:
         x2 = jnp.pad(x2, ((0, pad), (0, 0)))

@@ -169,15 +169,19 @@ def mlp_init(key, cfg, d_ff: int | None = None) -> Params:
 
 
 def mlp_apply(cfg, p: Params, x: jax.Array) -> jax.Array:
-    uk = cfg.use_kernels
-    if cfg.activation == "swiglu":
-        h = jax.nn.silu(linear(x, p["gate"], use_kernels=uk)) * linear(
-            x, p["up"], use_kernels=uk)
-        return linear(h, p["down"], use_kernels=uk)
-    if cfg.activation == "geglu":
-        h = jax.nn.gelu(linear(x, p["gate"], use_kernels=uk),
-                        approximate=True) * linear(x, p["up"], use_kernels=uk)
-        return linear(h, p["down"], use_kernels=uk)
-    h = jax.nn.gelu(linear(x, p["up"], p.get("up_bias"), use_kernels=uk),
-                    approximate=True)
-    return linear(h, p["down"], p.get("down_bias"), use_kernels=uk)
+    """One MLP = ONE operator.
+
+    ``ops.ffn_w4a16`` dispatches the whole FFN: the fused Pallas kernel for
+    quantized weights under ``cfg.use_kernels`` (one dispatch per MLP,
+    hidden state resident in VMEM), the blocked-XLA twin for quantized
+    weights elsewhere, and the seed's exact unfused composition for plain
+    16-bit weights — the latter ALSO under ``use_kernels``, because the
+    training path must stay differentiable and keep ``linear``'s dot
+    numerics (custom-VJP-free Pallas calls don't differentiate)."""
+    quantized = any(
+        isinstance(p.get(k), (QuantizedTensor, SparseQuantizedTensor))
+        for k in ("gate", "up", "down"))
+    return ops.ffn_w4a16(
+        x, p.get("gate"), p["up"], p["down"], activation=cfg.activation,
+        up_bias=p.get("up_bias"), down_bias=p.get("down_bias"),
+        impl="pallas" if (cfg.use_kernels and quantized) else "xla")

@@ -32,6 +32,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.quant import QuantizedTensor
+from repro.core.sparsity import SparseQuantizedTensor
+from repro.kernels import ops
 from repro.models.layers import Params, dense_init, linear
 from repro.parallel.compat import shard_map
 from repro.parallel.hints import active_mesh
@@ -125,6 +128,13 @@ def _moe_apply_local(cfg, p: Params, x: jax.Array):
 
     def expert_fn(hidden):  # (B, E, C, d)
         def ff(h, gw, uw, dw):
+            if any(isinstance(w, (QuantizedTensor, SparseQuantizedTensor))
+                   for w in (gw, uw, dw)):
+                # quantized serving experts: whole FFN as one op (fused
+                # kernel on TPU, blocked-XLA twin elsewhere)
+                return ops.ffn_w4a16(
+                    h, gw, uw, dw, activation="swiglu",
+                    impl="pallas" if cfg.use_kernels else "xla")
             a = jax.nn.silu(linear(h, gw, use_kernels=cfg.use_kernels)) * linear(
                 h, uw, use_kernels=cfg.use_kernels)
             return linear(a, dw, use_kernels=cfg.use_kernels)
@@ -150,10 +160,11 @@ def _moe_apply_shard_map_quant(cfg, p: Params, x: jax.Array, mesh):
     the hidden axis (packed nibbles + per-group scales shard together),
     dispatch runs redundantly per model shard (index math only), one psum
     after combine.  No FSDP gathers — serve weights replicate over data.
-    """
-    from repro.core.quant import QuantizedTensor
-    from repro.kernels import ref as kref
 
+    Each expert's FFN dispatches through ``ops.ffn_w4a16`` (the fused
+    Pallas kernel on TPU, the blocked-XLA twin elsewhere) — the dense
+    dequantize-everything oracle is no longer in this hot loop.
+    """
     da = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     M = mesh.shape["model"]
     gate, up, down = p["gate"], p["up"], p["down"]
@@ -174,9 +185,9 @@ def _moe_apply_shard_map_quant(cfg, p: Params, x: jax.Array, mesh):
                 gl = QuantizedTensor(gp, gsc, (d, f_loc), gs_col)
                 ul = QuantizedTensor(upk, usc, (d, f_loc), gs_col)
                 dl = QuantizedTensor(dpk, dsc, (f_loc, d), gs_row)
-                a = jax.nn.silu(kref.w4a16_matmul_ref(h, gl)) * \
-                    kref.w4a16_matmul_ref(h, ul)
-                return kref.w4a16_matmul_ref(a, dl)
+                return ops.ffn_w4a16(
+                    h, gl, ul, dl, activation="swiglu",
+                    impl="pallas" if cfg.use_kernels else "xla")
 
             return jax.vmap(one, in_axes=(1, 0, 0, 0, 0, 0, 0), out_axes=1)(
                 hidden, g_pk, g_sc, u_pk, u_sc, d_pk, d_sc)
@@ -248,8 +259,6 @@ def _moe_apply_shard_map(cfg, p: Params, x: jax.Array, mesh):
 
 def moe_apply(cfg, p: Params, x: jax.Array):
     """x (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
-    from repro.core.quant import QuantizedTensor
-
     mesh = active_mesh()
     if mesh is None or "model" not in mesh.axis_names or (
             x.shape[0] % _data_size(mesh)):

@@ -96,6 +96,7 @@ def save(ckpt_dir: str, step: int, state: dict[str, Any],
                              "group_size": leaf.group_size}
             if isinstance(leaf, SparseQuantizedTensor):
                 entry["meta"]["density"] = leaf.density
+                entry["meta"]["tile_uniform"] = leaf.tile_uniform
             sub = leaf.tree_flatten()[0]
             entry["fields"] = []
             entry["field_dtypes"] = []
@@ -168,7 +169,8 @@ def restore(ckpt_dir: str, step: int, like: dict[str, Any],
             if entry["kind"] == "SparseQuantizedTensor":
                 out.append(SparseQuantizedTensor(
                     placed[0], placed[1], placed[2],
-                    tuple(meta["shape"]), meta["density"], meta["group_size"]))
+                    tuple(meta["shape"]), meta["density"], meta["group_size"],
+                    meta.get("tile_uniform", False)))
             else:
                 out.append(QuantizedTensor(
                     placed[0], placed[1], tuple(meta["shape"]),
