@@ -1,0 +1,55 @@
+"""Shared benchmark helpers: the wall-clock harness and the modeled-HBM-byte
+primitives previously copy-pasted across decode_bench / ffn_bench.
+
+The byte model is the metric EdgeLLM optimizes (HBM bandwidth utilization):
+every bench reports bytes a step STREAMS from device memory, with
+context-independent terms both sides share omitted only when each module
+says so explicitly.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+SCALE_BYTES = 4  # one f32 absmax scale per token per head (int8-KV), per k/v
+
+
+def timeit_us(fn, *args, iters: int = 10, repeats: int = 3) -> float:
+    """us/call: best of ``repeats`` rounds of ``iters`` calls (min damps
+    scheduler noise on shared CI runners; the benched steps are
+    deterministic)."""
+    jax.block_until_ready(fn(*args))  # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e6
+
+
+def act_bytes(tokens: int, d: int, elt: int = 2) -> int:
+    """One activation pass of ``tokens`` rows of width ``d``."""
+    return tokens * d * elt
+
+
+def kv_stream_bytes(tokens, hkv: int, d: int, quant: bool,
+                    elt: int = 2) -> int:
+    """Bytes one attention step streams to read ``tokens`` cached positions
+    (K and V, all KV heads; int8 adds the per-token scales)."""
+    kv_elt = 1 if quant else elt
+    tok = int(np.sum(tokens))
+    return int(hkv * (2 * tok * d * kv_elt +
+                      (2 * tok * SCALE_BYTES if quant else 0)))
+
+
+def kv_cache_bytes(tokens: int, hkv: int, d: int, quant: bool,
+                   elt: int = 2) -> int:
+    """Resident HBM footprint of ``tokens`` cache positions per layer — the
+    capacity side of the same model (serving_bench's paged-vs-slot cut
+    reports it alongside the token counts)."""
+    return kv_stream_bytes(tokens, hkv, d, quant, elt)

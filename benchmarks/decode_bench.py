@@ -26,7 +26,6 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +35,10 @@ from repro.kernels import ops
 from repro.kernels.decode_flash import DEFAULT_BLOCK_KV, kv_block_size
 from repro.kernels.xla_attention import DEFAULT_DECODE_BLOCK_KV
 
-_SCALE_BYTES = 4  # one f32 absmax scale per token per head, for k and for v
+try:                       # module run (python -m benchmarks.decode_bench)
+    from benchmarks.common import kv_stream_bytes, timeit_us as _timeit
+except ImportError:        # direct script run (python benchmarks/...)
+    from common import kv_stream_bytes, timeit_us as _timeit
 
 
 def modeled_bytes_per_step(impl: str, B: int, hkv: int, d: int, S: int,
@@ -45,26 +47,32 @@ def modeled_bytes_per_step(impl: str, B: int, hkv: int, d: int, S: int,
 
     q/output traffic (B·hq·d·elt, context-independent) is omitted — it is
     identical across impls and orders of magnitude below the cache term.
+    Paged variants stream the same bytes as their contiguous twins (the
+    table adds 4·n_pages bytes/row — noise); paging buys CAPACITY, which
+    ``serving_bench --paged-capacity`` measures.
     """
-    kv_elt = 1 if quant else elt
     lens = np.minimum(np.asarray(lengths, np.int64).reshape(-1), S)
     lens = np.broadcast_to(lens, (B,))
     if impl == "dense":
-        per_row = 2 * S * d * kv_elt + (2 * S * _SCALE_BYTES if quant else 0)
+        base = kv_stream_bytes(B * S, hkv, d, quant, elt)
         if quant:
-            per_row += 2 * (2 * S * d * elt)  # dequantized copy: write + read
-        return int(B * hkv * per_row)
+            # the seed's dequantized copy: full-precision write + read
+            base += 2 * kv_stream_bytes(B * S, hkv, d, False, elt)
+        return base
     if impl == "blocked":
         bk = min(DEFAULT_DECODE_BLOCK_KV, S)
         nblk = int(np.ceil(lens.max() / bk))  # trip count = batch max
         tok = B * nblk * bk
-    elif impl == "pallas":
+    elif impl == "blocked-paged":
+        bk = kv_block_size(S, DEFAULT_BLOCK_KV)   # KV tile = page size
+        nblk = int(np.ceil(lens.max() / bk))
+        tok = B * nblk * bk
+    elif impl in ("pallas", "pallas-paged"):
         bk = kv_block_size(S, DEFAULT_BLOCK_KV)
         tok = int(np.ceil(np.maximum(lens, 1) / bk).sum()) * bk  # per row
     else:
         raise ValueError(impl)
-    return int(hkv * (2 * tok * d * kv_elt +
-                      (2 * tok * _SCALE_BYTES if quant else 0)))
+    return kv_stream_bytes(tok, hkv, d, quant, elt)
 
 
 def _decode_call(q, k, v, lengths, ks, vs, *, impl):
@@ -72,18 +80,9 @@ def _decode_call(q, k, v, lengths, ks, vs, *, impl):
                                 impl=impl)
 
 
-def _timeit(fn, *args, iters: int, repeats: int = 3) -> float:
-    """us/call: best of ``repeats`` rounds of ``iters`` calls (min damps
-    scheduler noise on shared CI runners; decode steps are deterministic)."""
-    jax.block_until_ready(fn(*args))  # compile + warm
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, (time.perf_counter() - t0) / iters)
-    return best * 1e6
+def _paged_decode_call(q, k, v, lengths, table, ks, vs, *, impl):
+    return ops.decode_attention(q, k, v, lengths, k_scale=ks, v_scale=vs,
+                                impl=impl, page_table=table)
 
 
 def make_operands(B, hq, hkv, S, d, quant, seed=0):
@@ -133,6 +132,62 @@ def bench_cells(B=4, hq=8, hkv=2, S=2048, d=64, contexts=(128, 512, 2048),
     return cells
 
 
+def _scramble_to_pool(arrs, B, S, bs, seed=0):
+    """Scatter contiguous (B, h, S, ...) caches into shared pools under one
+    random fragmented block assignment; returns (pools, page_table)."""
+    rng = np.random.default_rng(seed)
+    n_pages = S // bs
+    total = B * n_pages
+    table = rng.permutation(total).reshape(B, n_pages).astype(np.int32)
+    pools = []
+    for a in arrs:
+        if a is None:
+            pools.append(None)
+            continue
+        a = np.asarray(a)
+        pool = np.zeros((total + 1,) + a.shape[1:2] + (bs,) + a.shape[3:],
+                        a.dtype)
+        for b in range(B):
+            for p in range(n_pages):
+                pool[table[b, p]] = a[b, :, p * bs:(p + 1) * bs]
+        pools.append(jnp.asarray(pool))
+    return pools, jnp.asarray(table)
+
+
+def paged_cells(B=4, hq=8, hkv=2, S=2048, d=64, contexts=(128, 2048),
+                iters=5, pallas_iters=1) -> list[dict]:
+    """Paged-layout step time/bytes on a deliberately fragmented pool: the
+    gather/index-translate overhead of paging on the decode hot path (its
+    capacity upside is serving_bench's cut)."""
+    bs = kv_block_size(S, DEFAULT_BLOCK_KV)
+    cells = []
+    fns = {
+        "blocked-paged": jax.jit(functools.partial(_paged_decode_call,
+                                                   impl="xla")),
+        "pallas-paged": jax.jit(functools.partial(_paged_decode_call,
+                                                  impl="pallas")),
+    }
+    for quant in (False, True):
+        q, k, v, ks, vs = make_operands(B, hq, hkv, S, d, quant)
+        (pk, pv, pks, pvs), table = _scramble_to_pool([k, v, ks, vs],
+                                                      B, S, bs)
+        for ctx in contexts:
+            lengths = jnp.full((B,), ctx, jnp.int32)
+            for impl, fn in fns.items():
+                it = pallas_iters if impl.startswith("pallas") else iters
+                us = _timeit(fn, q, pk, pv, lengths, table, pks, pvs,
+                             iters=it)
+                cells.append({
+                    "B": B, "context": ctx, "max_len": S, "block_size": bs,
+                    "kv_quant": "int8" if quant else "none", "impl": impl,
+                    "us_per_step": round(us, 1),
+                    "tokens_per_s": round(B / (us / 1e6), 1),
+                    "modeled_bytes_per_step": modeled_bytes_per_step(
+                        impl, B, hkv, d, S, lengths, quant),
+                })
+    return cells
+
+
 def byte_ratios(cells: list[dict]) -> dict[str, float]:
     """dense-vs-{blocked,pallas} byte ratios at the shortest swept context."""
     ctx = min(c["context"] for c in cells)
@@ -168,6 +223,7 @@ def serving_e2e(kv_quant: str = "int8") -> dict:
 def run_smoke(path: str = "BENCH_decode.json") -> dict:
     """CI entry: small sweep + end-to-end engine number -> one JSON."""
     cells = bench_cells(contexts=(128, 2048), iters=5, pallas_iters=1)
+    cells += paged_cells(contexts=(128,), iters=3, pallas_iters=1)
     report = {
         "bench": "decode_attention",
         "cells": cells,
@@ -207,12 +263,16 @@ def main(argv=None) -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=2048)
     ap.add_argument("--contexts", default="128,512,2048")
+    ap.add_argument("--paged", action="store_true",
+                    help="also sweep the paged (fragmented-pool) layout")
     args = ap.parse_args(argv)
     if args.smoke:
         run_smoke(args.out)
         return
     contexts = tuple(int(c) for c in args.contexts.split(","))
     cells = bench_cells(B=args.batch, S=args.max_len, contexts=contexts)
+    if args.paged:
+        cells += paged_cells(B=args.batch, S=args.max_len, contexts=contexts)
     print(f"{'quant':>6} {'ctx':>6} {'impl':>8} {'us/step':>9} "
           f"{'tok/s':>9} {'bytes/step':>12}")
     for c in cells:

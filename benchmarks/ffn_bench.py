@@ -27,7 +27,6 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +35,11 @@ import numpy as np
 from repro.core.quant import GROUP_SIZE, quantize
 from repro.core.sparsity import block_sparsify_quantize
 from repro.kernels import ops
+
+try:                       # module run (python -m benchmarks.ffn_bench)
+    from benchmarks.common import act_bytes, timeit_us as _timeit
+except ImportError:        # direct script run (python benchmarks/...)
+    from common import act_bytes, timeit_us as _timeit
 
 STRATEGIES = ("dense-w4", "sparse-0.5", "sparse-0.25")
 
@@ -77,29 +81,17 @@ def modeled_bytes_per_step(tokens: int, d: int, f: int, gate, up, down,
     fused: weights + x once (resident block) + out — no hidden traffic.
     With a tile-uniform sparse down, only the down-kept fraction of the
     gate/up weight stream (and of the hidden compute) exists at all."""
-    x_bytes = tokens * d * elt
-    out_bytes = tokens * d * elt
+    x_bytes = act_bytes(tokens, d, elt)
+    out_bytes = act_bytes(tokens, d, elt)
     w_gate_up = gate.nbytes_model + up.nbytes_model
     w_down = down.nbytes_model
     if not fused:
-        hidden = 6 * tokens * f * elt
+        hidden = 6 * act_bytes(tokens, f, elt)
         return w_gate_up + w_down + 2 * x_bytes + hidden + out_bytes
     keep = 1.0
     if getattr(down, "tile_uniform", False):
         keep = down.kept_blocks / (f // GROUP_SIZE)
     return int(w_gate_up * keep) + w_down + x_bytes + out_bytes
-
-
-def _timeit(fn, *args, iters: int = 10, repeats: int = 3) -> float:
-    jax.block_until_ready(fn(*args))  # compile + warm
-    best = float("inf")
-    for _ in range(repeats):
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, (time.perf_counter() - t0) / iters)
-    return best * 1e6
 
 
 def bench_cells(d: int = 1024, f: int = 4096, tokens=(1, 8, 64),

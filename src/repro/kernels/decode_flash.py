@@ -93,8 +93,13 @@ def kv_block_size(max_len: int, block_kv: int) -> int:
     return bk
 
 
-def _kernel(len_ref, qlen_ref, q_ref, k_ref, v_ref, *rest, scale, window, bk,
-            max_len, rep, chunk, quant):
+def _kernel(len_ref, qlen_ref, *refs, scale, window, bk, max_len, rep, chunk,
+            quant, paged=False):
+    if paged:
+        # the page table is consumed by the BlockSpec index maps only — the
+        # body sees logical positions; physical placement is pure DMA routing
+        _pt_ref, *refs = refs
+    q_ref, k_ref, v_ref, *rest = refs
     if quant:
         ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -186,6 +191,7 @@ def mixed_flash_attention_pallas(
     v_scale: jax.Array | None = None,
     block_kv: int = DEFAULT_BLOCK_KV,
     interpret: bool | None = None,
+    page_table: jax.Array | None = None,
 ) -> jax.Array:
     """Mixed prefill/decode batched attention (chunk q-block).
 
@@ -196,19 +202,34 @@ def mixed_flash_attention_pallas(
     padding queries return zeros).  Rolling-SWA callers pass ``lengths``
     pre-clamped to the buffer size and ``window=None``.  Returns
     (B, hq, C, d) in q.dtype.
+
+    Paged layout: ``page_table`` (B, n_pages) int32 rides in as a THIRD
+    scalar-prefetch operand; the caches are shared pools
+    ``(P, hkv, bs, d)`` (scales ``(P, hkv, bs)``-shaped), the KV tile is
+    the page size, and the K/V BlockSpec index maps translate the logical
+    block id to ``page_table[b, ik]`` — the length-clamp DMA elision
+    composes unchanged (clamped steps revisit the last live page's physical
+    block, so Mosaic skips the copy).
     """
     if interpret is None:
         interpret = default_interpret()
     b, hq, chunk, d = q.shape
-    hkv, max_len = k_cache.shape[1], k_cache.shape[2]
+    hkv = k_cache.shape[1]
+    paged = page_table is not None
+    if paged:
+        bk = k_cache.shape[2]                 # the page size IS the KV tile
+        n_blocks = page_table.shape[1]
+        max_len = n_blocks * bk
+    else:
+        max_len = k_cache.shape[2]
+        bk = kv_block_size(max_len, block_kv)
+        n_blocks = max_len // bk
     if hq % hkv:
         raise ValueError(f"hq={hq} not a multiple of hkv={hkv}")
     rep = hq // hkv
     rows = rep * chunk
     quant = k_scale is not None
     scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
-    bk = kv_block_size(max_len, block_kv)
-    n_blocks = max_len // bk
 
     lengths = jnp.broadcast_to(
         jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
@@ -217,7 +238,7 @@ def mixed_flash_attention_pallas(
     # (B, hq, C, d) -> (B, hkv, rep*C, d): row r*C + j is (group head r, query j)
     q4 = q.reshape(b, hkv, rep, chunk, d).reshape(b, hkv, rows, d)
 
-    def kv_map(ib, h, ik, len_ref, qlen_ref):
+    def _live_block(ib, ik, len_ref, qlen_ref):
         # clamp into the row's live block range: steps outside it revisit an
         # already-resident block, so Mosaic issues no DMA for them
         vl = jnp.clip(len_ref[ib], 1, max_len)
@@ -227,12 +248,18 @@ def mixed_flash_attention_pallas(
         else:
             first = jnp.minimum(jnp.maximum(
                 (len_ref[ib] - qlen_ref[ib] - window + 1) // bk, 0), last)
-        return (ib, h, jnp.clip(ik, first, last), 0)
+        return jnp.clip(ik, first, last)
 
-    def kv_scale_map(ib, h, ik, len_ref, qlen_ref):
-        return kv_map(ib, h, ik, len_ref, qlen_ref)[:3]
+    def kv_map(ib, h, ik, len_ref, qlen_ref, *pt_ref):
+        lg = _live_block(ib, ik, len_ref, qlen_ref)
+        if paged:     # logical -> physical page translation
+            return (pt_ref[0][ib, lg], h, 0, 0)
+        return (ib, h, lg, 0)
 
-    def q_map(ib, h, ik, len_ref, qlen_ref):
+    def kv_scale_map(ib, h, ik, len_ref, qlen_ref, *pt_ref):
+        return kv_map(ib, h, ik, len_ref, qlen_ref, *pt_ref)[:3]
+
+    def q_map(ib, h, ik, len_ref, qlen_ref, *pt_ref):
         return (ib, h, 0, 0)
 
     in_specs = [
@@ -246,19 +273,25 @@ def mixed_flash_attention_pallas(
             pl.BlockSpec((1, 1, bk), kv_scale_map),
             pl.BlockSpec((1, 1, bk), kv_scale_map),
         ]
+        scale_shape = ((k_cache.shape[0], hkv, bk) if paged
+                       else (b, hkv, max_len))
         operands += [
-            k_scale.astype(jnp.float32).reshape(b, hkv, max_len),
-            v_scale.astype(jnp.float32).reshape(b, hkv, max_len),
+            k_scale.astype(jnp.float32).reshape(scale_shape),
+            v_scale.astype(jnp.float32).reshape(scale_shape),
         ]
 
     kernel = functools.partial(
         _kernel, scale=scale_v, window=window, bk=bk, max_len=max_len,
-        rep=rep, chunk=chunk, quant=quant)
+        rep=rep, chunk=chunk, quant=quant, paged=paged)
+
+    prefetch = [lengths, q_lens]
+    if paged:
+        prefetch.append(jnp.asarray(page_table, jnp.int32))
 
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=len(prefetch),
             grid=(b, hkv, n_blocks),
             in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, rows, d), q_map),
@@ -273,7 +306,7 @@ def mixed_flash_attention_pallas(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(lengths, q_lens, *operands)
+    )(*prefetch, *operands)
     return out.reshape(b, hkv, rep, chunk, d).reshape(b, hq, chunk, d)
 
 
@@ -289,14 +322,16 @@ def decode_flash_attention_pallas(
     v_scale: jax.Array | None = None,
     block_kv: int = DEFAULT_BLOCK_KV,
     interpret: bool | None = None,
+    page_table: jax.Array | None = None,
 ) -> jax.Array:
     """One-token batched decode attention: the chunk=1 specialization.
 
     ``q`` (B, hq, 1, d); caches (B, hkv, MAX, d) in fp or int8 (with
-    ``k_scale``/``v_scale`` (B, hkv, MAX, 1) f32); ``lengths`` scalar or
-    (B,) = per-row valid context *including* the new token.  Rolling-SWA
-    callers pass ``lengths`` pre-clamped to the buffer size and
-    ``window=None``.  Returns (B, hq, 1, d) in q.dtype.
+    ``k_scale``/``v_scale`` (B, hkv, MAX, 1) f32) — or shared pools with a
+    ``page_table``; ``lengths`` scalar or (B,) = per-row valid context
+    *including* the new token.  Rolling-SWA callers pass ``lengths``
+    pre-clamped to the buffer size and ``window=None``.  Returns
+    (B, hq, 1, d) in q.dtype.
     """
     b, hq, sq, d = q.shape
     if sq != 1:
@@ -305,4 +340,4 @@ def decode_flash_attention_pallas(
     return mixed_flash_attention_pallas(
         q, k_cache, v_cache, lengths, jnp.ones((b,), jnp.int32),
         window=window, scale=scale, k_scale=k_scale, v_scale=v_scale,
-        block_kv=block_kv, interpret=interpret)
+        block_kv=block_kv, interpret=interpret, page_table=page_table)

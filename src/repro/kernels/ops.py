@@ -16,6 +16,7 @@ models only ever call these wrappers.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.quant import QuantizedTensor
 from repro.core.sparsity import SparseQuantizedTensor
@@ -26,7 +27,7 @@ from repro.kernels.sparse_w4a16 import sparse_w4a16_matmul_pallas
 from repro.kernels.w4a16_matmul import w4a16_matmul_pallas
 
 __all__ = ["w4a16_matmul", "sparse_w4a16_matmul", "ffn_w4a16", "attention",
-           "decode_attention", "mixed_attention"]
+           "decode_attention", "mixed_attention", "gather_paged_cache"]
 
 # one backend probe for the whole package: the kernels resolve their
 # interpret=None default through the same (cached) function
@@ -152,6 +153,40 @@ def attention(
     raise ValueError(f"unknown impl {impl!r}")
 
 
+def gather_paged_cache(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize a paged pool ``(P, g, bs, ...)`` as the contiguous
+    per-slot cache ``(b, g, n_pages*bs, ...)`` a dense oracle expects —
+    the layout inverse of the engine's block leasing (null-block pages
+    gather finite garbage that true-length masking hides, exactly like
+    stale rows in the slot layout)."""
+    g = jnp.take(pool, page_table, axis=0)        # (b, n_pages, g, bs, ...)
+    b, npg, heads, bs = g.shape[:4]
+    g = jnp.moveaxis(g, 2, 1)                     # (b, g, n_pages, bs, ...)
+    return g.reshape(b, heads, npg * bs, *g.shape[4:])
+
+
+def _paged_kernel_ok(pool: jax.Array) -> bool:
+    return pool.shape[2] >= 8    # page size tiles the kernel's KV block
+
+
+def _materialize_ref_cache(q, k_cache, v_cache, k_scale, v_scale, page_table):
+    """The ref oracle's operand prep: gather a paged pool contiguous, then
+    drop any int8 quantization via a full-precision copy (the seed's path)."""
+    k_full, v_full = k_cache, v_cache
+    ks_full, vs_full = k_scale, v_scale
+    if page_table is not None:
+        k_full = gather_paged_cache(k_full, page_table)
+        v_full = gather_paged_cache(v_full, page_table)
+        if k_scale is not None:
+            ks_full = gather_paged_cache(ks_full, page_table)
+            vs_full = gather_paged_cache(vs_full, page_table)
+    if k_scale is not None:
+        from repro.models.attention import dequantize_kv
+        k_full = dequantize_kv(k_full, ks_full, q.dtype)
+        v_full = dequantize_kv(v_full, vs_full, q.dtype)
+    return k_full, v_full
+
+
 def decode_attention(
     q: jax.Array,
     k_cache: jax.Array,
@@ -163,12 +198,16 @@ def decode_attention(
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
     impl: str = "auto",
+    page_table: jax.Array | None = None,
 ) -> jax.Array:
     """One-token decode attention against a preallocated KV cache.
 
     q (b, hq, 1, d); caches (b, hkv, MAX, d) — fp, or int8 with
     ``k_scale``/``v_scale`` (b, hkv, MAX, 1), in which case dequant is fused
     into the attention (scale-after-dot; the cache is read at 1 byte/value).
+    With ``page_table`` (b, n_pages) the caches are shared paged pools
+    ``(P, hkv, bs, d)`` (scales ``(P, hkv, bs, 1)``) and every impl
+    translates logical blocks through the table.
 
     * ``impl="pallas"`` — the flash-decoding kernel: per-row KV-block
       skipping, bytes and FLOPs scale with each row's actual context.
@@ -177,31 +216,30 @@ def decode_attention(
       and in the distributed serve_step (length masks keep addresses static
       under jit — the paper's MAX-token trick).
     * ``impl="ref"``    — the dense full-cache oracle (dequantizes the whole
-      cache first when quantized): the numerics ground truth and the
-      bandwidth baseline ``benchmarks/decode_bench.py`` measures against.
+      cache first when quantized; gathers a paged pool contiguous first):
+      the numerics ground truth and the bandwidth baseline
+      ``benchmarks/decode_bench.py`` measures against.
     """
     if impl == "auto":
         impl = "pallas" if _ON_TPU else "xla"
     if impl == "pallas":
         from repro.kernels.decode_flash import (
             DEFAULT_BLOCK_KV, decode_flash_attention_pallas, kv_block_size)
-        if kv_block_size(k_cache.shape[2], DEFAULT_BLOCK_KV) >= 8:
+        ok = (_paged_kernel_ok(k_cache) if page_table is not None
+              else kv_block_size(k_cache.shape[2], DEFAULT_BLOCK_KV) >= 8)
+        if ok:
             return decode_flash_attention_pallas(
                 q, k_cache, v_cache, length, window=window, scale=scale,
-                k_scale=k_scale, v_scale=v_scale)
+                k_scale=k_scale, v_scale=v_scale, page_table=page_table)
         impl = "xla"  # cache length tiles too poorly for the kernel
     if impl == "xla":
         from repro.kernels.xla_attention import decode_attention_blocked
         return decode_attention_blocked(
             q, k_cache, v_cache, length, window=window, scale=scale,
-            k_scale=k_scale, v_scale=v_scale)
+            k_scale=k_scale, v_scale=v_scale, page_table=page_table)
     if impl == "ref":
-        k_full, v_full = k_cache, v_cache
-        if k_scale is not None:
-            # the seed's path: materialize a full-precision cache copy
-            from repro.models.attention import dequantize_kv
-            k_full = dequantize_kv(k_cache, k_scale, q.dtype)
-            v_full = dequantize_kv(v_cache, v_scale, q.dtype)
+        k_full, v_full = _materialize_ref_cache(
+            q, k_cache, v_cache, k_scale, v_scale, page_table)
         return _ref.decode_attention_ref(
             q, k_full, v_full, length, window=window, scale=scale)
     raise ValueError(f"unknown impl {impl!r}")
@@ -219,6 +257,7 @@ def mixed_attention(
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
     impl: str = "auto",
+    page_table: jax.Array | None = None,
 ) -> jax.Array:
     """Mixed prefill/decode attention against a preallocated KV cache.
 
@@ -227,6 +266,7 @@ def mixed_attention(
     = a row mid-prefill), ``lengths`` (b,) is the valid context *including*
     this step's chunk, and intra-chunk causality is masked per query — one
     dispatch advances a mixed batch (the serving tick's shape contract).
+    ``page_table`` switches all three impls to the paged pool layout.
 
     * ``impl="pallas"`` — the flash-decoding kernel with a chunk q-block:
       per-row KV-block skipping, the chunk rides the same DMA pipeline.
@@ -239,22 +279,22 @@ def mixed_attention(
     if impl == "pallas":
         from repro.kernels.decode_flash import (
             DEFAULT_BLOCK_KV, kv_block_size, mixed_flash_attention_pallas)
-        if kv_block_size(k_cache.shape[2], DEFAULT_BLOCK_KV) >= 8:
+        ok = (_paged_kernel_ok(k_cache) if page_table is not None
+              else kv_block_size(k_cache.shape[2], DEFAULT_BLOCK_KV) >= 8)
+        if ok:
             return mixed_flash_attention_pallas(
                 q, k_cache, v_cache, lengths, q_lens, window=window,
-                scale=scale, k_scale=k_scale, v_scale=v_scale)
+                scale=scale, k_scale=k_scale, v_scale=v_scale,
+                page_table=page_table)
         impl = "xla"  # cache length tiles too poorly for the kernel
     if impl == "xla":
         from repro.kernels.xla_attention import mixed_attention_blocked
         return mixed_attention_blocked(
             q, k_cache, v_cache, lengths, q_lens, window=window, scale=scale,
-            k_scale=k_scale, v_scale=v_scale)
+            k_scale=k_scale, v_scale=v_scale, page_table=page_table)
     if impl == "ref":
-        k_full, v_full = k_cache, v_cache
-        if k_scale is not None:
-            from repro.models.attention import dequantize_kv
-            k_full = dequantize_kv(k_cache, k_scale, q.dtype)
-            v_full = dequantize_kv(v_cache, v_scale, q.dtype)
+        k_full, v_full = _materialize_ref_cache(
+            q, k_cache, v_cache, k_scale, v_scale, page_table)
         return _ref.mixed_attention_ref(
             q, k_full, v_full, lengths, q_lens, window=window, scale=scale)
     raise ValueError(f"unknown impl {impl!r}")

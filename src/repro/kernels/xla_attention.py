@@ -101,6 +101,7 @@ def decode_blocked_partials(
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
     block_kv: int = DEFAULT_DECODE_BLOCK_KV,
+    page_table: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Flash-decoding partials over a blocked KV walk (the shared loop).
 
@@ -111,6 +112,14 @@ def decode_blocked_partials(
     or None when every query may see every valid position (the shard-local
     partial case).  ``k_scale``/``v_scale`` (b, g, T) f32 for int8 KV.
 
+    Paged layout: ``page_table`` (b, n_pages) of physical block ids turns
+    each walk step into a pool gather — caches are shared pools
+    ``(P, g, bs, d)`` (scales ``(P, g, bs)``), the KV tile IS the page size,
+    and logical block ``ib`` of row ``b`` reads ``pool[page_table[b, ib]]``.
+    Entries past a row's live range point at the null block; its data is
+    finite and fully masked, so partials stay bit-identical to the
+    contiguous walk over the same token values.
+
     A ``lax.while_loop`` walks KV blocks and stops after the last block any
     row still needs, so bytes and FLOPs scale with ``max(n_valid)`` instead
     of T.  Blocks a row has outgrown contribute exact zeros (masked p) and
@@ -120,11 +129,17 @@ def decode_blocked_partials(
     ready for the log-sum-exp merge (with other blocks or sequence shards).
     """
     b, g, rep, sq, d = q5.shape
-    max_len = k_cache.shape[2]
-    # bk need not divide max_len: the final block's slice start is clamped
-    # and its already-covered positions masked out (dynamic_slice can't
-    # overrun, and exactness survives because masked p is exactly 0)
-    bk = min(block_kv, max_len)
+    if page_table is not None:
+        # the pool's block extent is the page size; max_len is the page
+        # table's addressable span (bs always divides it by construction)
+        bk = k_cache.shape[2]
+        max_len = page_table.shape[1] * bk
+    else:
+        max_len = k_cache.shape[2]
+        # bk need not divide max_len: the final block's slice start is clamped
+        # and its already-covered positions masked out (dynamic_slice can't
+        # overrun, and exactness survives because masked p is exactly 0)
+        bk = min(block_kv, max_len)
     n_valid = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1), (b,))
 
     n_live = (jnp.max(n_valid) + bk - 1) // bk              # traced trip count
@@ -139,14 +154,24 @@ def decode_blocked_partials(
     def body(carry):
         ib, m, l, acc = carry
         block_start = ib * bk
-        off = jnp.minimum(block_start, max_len - bk)   # clamp final block
-        kb = jax.lax.dynamic_slice_in_dim(k_cache, off, bk, axis=2)
-        vb = jax.lax.dynamic_slice_in_dim(v_cache, off, bk, axis=2)
-        ksb = None if k_scale is None else jax.lax.dynamic_slice_in_dim(
-            k_scale, off, bk, axis=2)
-        vsb = None if v_scale is None else jax.lax.dynamic_slice_in_dim(
-            v_scale, off, bk, axis=2)
-        pos = off + pos_base
+        if page_table is not None:
+            # logical → physical: gather each row's block from the pool
+            ids = jax.lax.dynamic_slice_in_dim(
+                page_table, ib, 1, axis=1)[:, 0]            # (b,)
+            kb = jnp.take(k_cache, ids, axis=0)             # (b, g, bk, d)
+            vb = jnp.take(v_cache, ids, axis=0)
+            ksb = None if k_scale is None else jnp.take(k_scale, ids, axis=0)
+            vsb = None if v_scale is None else jnp.take(v_scale, ids, axis=0)
+            pos = block_start + pos_base
+        else:
+            off = jnp.minimum(block_start, max_len - bk)   # clamp final block
+            kb = jax.lax.dynamic_slice_in_dim(k_cache, off, bk, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v_cache, off, bk, axis=2)
+            ksb = None if k_scale is None else jax.lax.dynamic_slice_in_dim(
+                k_scale, off, bk, axis=2)
+            vsb = None if v_scale is None else jax.lax.dynamic_slice_in_dim(
+                v_scale, off, bk, axis=2)
+            pos = off + pos_base
         # mask positions a clamped final block re-covers (pos < block_start)
         valid = (pos[None, :] >= block_start) & \
                 (pos[None, :] < n_valid[:, None])           # (b, bk)
@@ -183,32 +208,44 @@ def decode_attention_blocked(
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
     block_kv: int = DEFAULT_DECODE_BLOCK_KV,
+    page_table: jax.Array | None = None,
 ) -> jax.Array:
     """Length-blocked decode attention (the XLA hot path).
 
     Same contract as ``decode_flash_attention_pallas``: q (b, hq, 1, d),
-    caches (b, hkv, MAX, d), ``lengths`` scalar or (b,).  A while_loop walks
-    KV blocks and stops after the last block any row still needs, so a
-    128-token context in a 2048-slot cache does 1/16th of the dense ref's
-    work — see ``decode_blocked_partials`` for the exactness argument.
+    caches (b, hkv, MAX, d), ``lengths`` scalar or (b,).  With
+    ``page_table`` (b, n_pages) the caches are shared pools
+    ``(P, hkv, bs, d)`` and each walk step gathers the row's physical block.
+    A while_loop walks KV blocks and stops after the last block any row
+    still needs, so a 128-token context in a 2048-slot cache does 1/16th of
+    the dense ref's work — see ``decode_blocked_partials`` for the
+    exactness argument.
     """
     b, hq, sq, d = q.shape
-    hkv, max_len = k_cache.shape[1], k_cache.shape[2]
+    hkv = k_cache.shape[1]
+    paged = page_table is not None
+    max_len = (page_table.shape[1] * k_cache.shape[2] if paged
+               else k_cache.shape[2])
     rep = hq // hkv
     scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
     lengths = jnp.broadcast_to(
         jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
 
-    k_cache = hint(k_cache, "batch", None, "seq_mp", None)
-    v_cache = hint(v_cache, "batch", None, "seq_mp", None)
+    if not paged:
+        # pool leaves have no (batch, seq) axes to hint; the sharded decode
+        # path stays on the slot layout
+        k_cache = hint(k_cache, "batch", None, "seq_mp", None)
+        v_cache = hint(v_cache, "batch", None, "seq_mp", None)
     q5 = q.reshape(b, hkv, rep, 1, d)
-    ks3 = None if k_scale is None else k_scale.reshape(b, hkv, max_len)
-    vs3 = None if v_scale is None else v_scale.reshape(b, hkv, max_len)
+    scale_shape = (k_cache.shape[0], hkv, k_cache.shape[2]) if paged else \
+        (b, hkv, max_len)
+    ks3 = None if k_scale is None else k_scale.reshape(scale_shape)
+    vs3 = None if v_scale is None else v_scale.reshape(scale_shape)
 
     _, l, acc = decode_blocked_partials(
         q5, k_cache, v_cache, jnp.clip(lengths, 0, max_len),
         scale=scale_v, q_pos=(lengths - 1)[:, None], window=window,
-        k_scale=ks3, v_scale=vs3, block_kv=block_kv)
+        k_scale=ks3, v_scale=vs3, block_kv=block_kv, page_table=page_table)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, hq, sq, d).astype(q.dtype)
 
@@ -225,6 +262,7 @@ def mixed_attention_blocked(
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
     block_kv: int = DEFAULT_DECODE_BLOCK_KV,
+    page_table: jax.Array | None = None,
 ) -> jax.Array:
     """Mixed prefill/decode attention: per-row variable query counts.
 
@@ -234,10 +272,14 @@ def mixed_attention_blocked(
     query j of row b sits at absolute position ``lengths[b] - q_lens[b] + j``
     and attends causally: cache positions ``<=`` its own.  ``q_lens[b] == 1``
     is exactly single-token decode; a decoding row and a mid-prefill row
-    coexist in one dispatch — the serving tick's mixed batch.
+    coexist in one dispatch — the serving tick's mixed batch.  With
+    ``page_table`` the caches are shared pools (paged layout).
     """
     b, hq, c, d = q.shape
-    hkv, max_len = k_cache.shape[1], k_cache.shape[2]
+    hkv = k_cache.shape[1]
+    paged = page_table is not None
+    max_len = (page_table.shape[1] * k_cache.shape[2] if paged
+               else k_cache.shape[2])
     rep = hq // hkv
     scale_v = scale if scale is not None else float(1.0 / (d ** 0.5))
     lengths = jnp.broadcast_to(
@@ -245,11 +287,14 @@ def mixed_attention_blocked(
     q_lens = jnp.broadcast_to(
         jnp.asarray(q_lens, jnp.int32).reshape(-1), (b,))
 
-    k_cache = hint(k_cache, "batch", None, "seq_mp", None)
-    v_cache = hint(v_cache, "batch", None, "seq_mp", None)
+    if not paged:
+        k_cache = hint(k_cache, "batch", None, "seq_mp", None)
+        v_cache = hint(v_cache, "batch", None, "seq_mp", None)
     q5 = q.reshape(b, hkv, rep, c, d)
-    ks3 = None if k_scale is None else k_scale.reshape(b, hkv, max_len)
-    vs3 = None if v_scale is None else v_scale.reshape(b, hkv, max_len)
+    scale_shape = (k_cache.shape[0], hkv, k_cache.shape[2]) if paged else \
+        (b, hkv, max_len)
+    ks3 = None if k_scale is None else k_scale.reshape(scale_shape)
+    vs3 = None if v_scale is None else v_scale.reshape(scale_shape)
 
     j = jnp.arange(c)
     q_pos = (lengths - q_lens)[:, None] + j[None, :]         # (b, C)
@@ -258,7 +303,7 @@ def mixed_attention_blocked(
     _, l, acc = decode_blocked_partials(
         q5, k_cache, v_cache, jnp.clip(lengths, 0, max_len),
         scale=scale_v, q_pos=q_pos, window=window,
-        k_scale=ks3, v_scale=vs3, block_kv=block_kv)
+        k_scale=ks3, v_scale=vs3, block_kv=block_kv, page_table=page_table)
     # dead queries have l == 0 (everything masked) -> exact zeros out
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, hq, c, d).astype(q.dtype)

@@ -30,10 +30,19 @@ def main() -> None:
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--kv-layout", default="slot", choices=["slot", "paged"],
+                    help="paged = shared block pool + per-slot page tables")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="shared-pool blocks (0 = batch * pages per slot)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    kv = dict(kv_layout=args.kv_layout, kv_block_size=args.kv_block_size,
+              kv_pool_blocks=args.kv_pool_blocks)
+    cfg = (get_config(args.arch, **kv) if args.full
+           else get_smoke_config(args.arch, **kv))
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     if args.strategy != "none":
         params = quantize_model(params, args.strategy)
@@ -56,6 +65,12 @@ def main() -> None:
     print(f"compile cache: {sorted(engine.cache_compiles.keys())} "
           f"({engine.cache_compiles.hits} hits, "
           f"misses by kind {engine.cache_compiles.misses_by_name})")
+    if engine.paged:
+        print(f"paged KV: {engine.pool_blocks} blocks x "
+              f"{engine.block_size} tokens, peak resident "
+              f"{engine.peak_resident_tokens} tokens, "
+              f"{engine.admission_stalls} admission stalls, "
+              f"pool {engine.pool_stats()}")
 
 
 if __name__ == "__main__":

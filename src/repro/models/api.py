@@ -32,6 +32,15 @@ families this is the per-row state reset that makes slot reuse safe; and
 (pristine state, plus the request's cross-attention K/V for audio).  All
 slot ops are jit-safe with a traced ``slot`` (one executable per batch
 size, not per slot).
+
+Paged KV (``cfg.kv_layout == "paged"``): KV leaves become ONE shared block
+pool addressed through a per-slot page table that rides into each dispatch
+(``page_table=`` on decode_step/mixed_step; None = the linear default of a
+default-sized pool).  Pool leaves have no slot axis — ``cache_slot_axes``
+marks them ``-1`` and insert/evict/per-row selects skip them; writes that
+must not land are routed to the pool's null block (``write_mask``).  The
+engine owns allocation (see serving/engine.py); this module keeps the
+layout invisible to numerics.
 """
 
 from __future__ import annotations
@@ -103,8 +112,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     raise ValueError(f"unknown family {cfg.family!r}")
 
 
+def has_paged_kv(cfg: ModelConfig) -> bool:
+    """Whether this config's cache carries paged (shared-pool) KV leaves.
+    The ssm family is pure recurrent state — O(1) in context — so paging is
+    a no-op there and the engine keeps its slot bookkeeping."""
+    return cfg.kv_layout == "paged" and cfg.family != "ssm"
+
+
 def cache_slot_axes(cfg: ModelConfig) -> Params:
-    """Pytree (cache structure) of ints: the request-slot axis of each leaf."""
+    """Pytree (cache structure) of ints: the request-slot axis of each leaf.
+    ``-1`` marks paged shared-pool leaves (no slot axis — insert/evict and
+    per-row selects must skip them; masked writes are routed to the null
+    block instead of being reverted)."""
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.cache_slot_axes(cfg)
     if cfg.family == "ssm":
@@ -127,6 +146,8 @@ def insert_request(cfg: ModelConfig, cache: Params, row_cache: Params,
     slot = jnp.asarray(slot, jnp.int32)
 
     def ins(dst, row, axis):
+        if axis < 0:        # shared paged pool: nothing per-slot to scatter
+            return dst
         return jax.lax.dynamic_update_slice_in_dim(
             dst, row.astype(dst.dtype), slot, axis=axis)
 
@@ -160,15 +181,22 @@ def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int):
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
-                tokens: jax.Array, lengths):
+                tokens: jax.Array, lengths, *, page_table=None,
+                write_mask=None):
+    """``page_table``/``write_mask`` apply to paged-KV caches only: the
+    table routes K/V placement (None = the linear default covering a
+    default-sized pool) and the mask sends a row's write to the null block
+    — a pool has no slot axis for callers to select-revert over."""
+    kw = {"page_table": page_table, "write_mask": write_mask}
     if cfg.family in _TRANSFORMER_FAMILIES:
-        return transformer.decode_step(cfg, params, cache, tokens, lengths)
+        return transformer.decode_step(cfg, params, cache, tokens, lengths,
+                                       **kw)
     if cfg.family == "ssm":
         return xlstm_stack.decode_step(cfg, params, cache, tokens, lengths)
     if cfg.family == "hybrid":
-        return zamba.decode_step(cfg, params, cache, tokens, lengths)
+        return zamba.decode_step(cfg, params, cache, tokens, lengths, **kw)
     if cfg.family == "audio":
-        return whisper.decode_step(cfg, params, cache, tokens, lengths)
+        return whisper.decode_step(cfg, params, cache, tokens, lengths, **kw)
     raise ValueError(f"unknown family {cfg.family!r}")
 
 
@@ -198,7 +226,7 @@ def needs_admission_insert(cfg: ModelConfig) -> bool:
 
 
 def _mixed_step_scan(cfg: ModelConfig, params: Params, cache: Params,
-                     tokens: jax.Array, lengths, q_lens):
+                     tokens: jax.Array, lengths, q_lens, page_table=None):
     """Generic mixed step for recurrent/stateful families.
 
     Scans the chunk axis INSIDE one jitted call (still one device dispatch
@@ -207,11 +235,16 @@ def _mixed_step_scan(cfg: ModelConfig, params: Params, cache: Params,
     the resulting state is bit-identical to feeding the tokens one
     ``decode_step`` at a time.  This is what materializes the TRUE
     post-prompt recurrent state for ssm/hybrid during chunked admission.
+
+    Paged KV leaves (axis ``-1``) have no slot axis to select over; their
+    inactive-row writes are instead masked at the source (``write_mask``
+    routes them to the null block), so the select keeps the new pool as-is.
     """
     b, c = tokens.shape
     lengths = jnp.asarray(lengths, jnp.int32)
     q_lens = jnp.asarray(q_lens, jnp.int32)
     axes = cache_slot_axes(cfg)
+    paged = has_paged_kv(cfg)
 
     def body(carry, j):
         cur, logits = carry
@@ -220,9 +253,13 @@ def _mixed_step_scan(cfg: ModelConfig, params: Params, cache: Params,
         # inactive rows re-run their final position; their writes are
         # reverted by the select below, so this is just shape plumbing
         step_len = lengths + jnp.minimum(j + 1, jnp.maximum(q_lens, 1))
-        lg, new = decode_step(cfg, params, cur, tok, step_len)
+        lg, new = decode_step(cfg, params, cur, tok, step_len,
+                              page_table=page_table,
+                              write_mask=active if paged else None)
 
         def sel(n, old, ax):
+            if ax < 0:          # paged pool: writes already null-routed
+                return n
             shape = [1] * n.ndim
             shape[ax] = b
             return jnp.where(active.reshape(shape), n, old)
@@ -239,20 +276,22 @@ def _mixed_step_scan(cfg: ModelConfig, params: Params, cache: Params,
 
 
 def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
-               tokens: jax.Array, lengths, q_lens):
+               tokens: jax.Array, lengths, q_lens, *, page_table=None):
     """Advance every row by a per-row token count in ONE dispatch.
 
     tokens (B, C); ``lengths`` (B,) = valid cache tokens BEFORE this step;
     ``q_lens`` (B,) = live tokens per row this tick (0 = idle slot, 1 =
     decoding row, up to C = mid-prefill row, left-aligned in its chunk).
     Returns (logits (B, V) of each row's last live token, new cache).
+    ``page_table`` (B, pages) routes paged-KV placement (None = the linear
+    default table of a default-sized pool).
 
     Transformer families run the fused chunk-attention path (one KV stream
     for the whole mixed batch); recurrent/stateful families scan the chunk
     axis in-executable (``_mixed_step_scan``).  ``C == 1`` delegates to
     ``decode_step`` (bit-identical to the classic pure-decode tick when
     every row is live), with a per-row select keeping ``q_lens == 0`` rows
-    exactly untouched.
+    exactly untouched (paged pool leaves mask at the write instead).
     """
     if tokens.shape[1] == 1:
         b = tokens.shape[0]
@@ -260,11 +299,16 @@ def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
             jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
         q_lens = jnp.broadcast_to(
             jnp.asarray(q_lens, jnp.int32).reshape(-1), (b,))
-        logits, new = decode_step(cfg, params, cache, tokens,
-                                  lengths + jnp.maximum(q_lens, 1))
         active = q_lens > 0
+        paged = has_paged_kv(cfg)
+        logits, new = decode_step(cfg, params, cache, tokens,
+                                  lengths + jnp.maximum(q_lens, 1),
+                                  page_table=page_table,
+                                  write_mask=active if paged else None)
 
         def sel(n, old, ax):
+            if ax < 0:          # paged pool: writes already null-routed
+                return n
             shape = [1] * n.ndim
             shape[ax] = b
             return jnp.where(active.reshape(shape), n, old)
@@ -274,7 +318,8 @@ def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
                          jnp.zeros_like(logits)), new
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.mixed_step(cfg, params, cache, tokens, lengths,
-                                      q_lens)
+                                      q_lens, page_table=page_table)
     if cfg.family in ("ssm", "hybrid", "audio"):
-        return _mixed_step_scan(cfg, params, cache, tokens, lengths, q_lens)
+        return _mixed_step_scan(cfg, params, cache, tokens, lengths, q_lens,
+                                page_table=page_table)
     raise ValueError(f"unknown family {cfg.family!r}")

@@ -68,7 +68,99 @@ def attn_apply(cfg, p: Params, x: jax.Array, positions, *,
     return linear(o, p["wo"], use_kernels=cfg.use_kernels)
 
 
+# -- paged KV layout ---------------------------------------------------------
+#
+# The slot cache reserves ``max_len`` rows per slot; the paged layout leases
+# fixed-size blocks from ONE shared pool instead.  Per layer the pool leaf is
+# ``(n_blocks + 1, hkv, block_size, hd)`` — the LAST block is the null block:
+# writes that must not land (dead chunk queries, masked decode rows) are
+# routed there, and page-table entries of pages a slot has not leased point
+# there too, so a stale table can never alias a live block.  The page table
+# ``(B, pages_per_slot)`` of physical block ids is HOST-managed (the engine
+# allocates/frees blocks) and rides into each dispatch as a plain operand —
+# logical position ``p`` of slot ``b`` lives at
+# ``pool[page_table[b, p // bs], :, p % bs]``.
+
+def paged_geometry(cfg, max_len: int) -> tuple[int, int]:
+    """(block_size, pages_per_slot) for a paged cache addressing ``max_len``
+    logical positions per slot (the last page may be partially addressable)."""
+    bs = cfg.kv_block_size
+    return bs, -(-max_len // bs)
+
+
+def paged_pool_blocks(cfg, batch: int, max_len: int) -> int:
+    """Usable (non-null) pool blocks: ``cfg.kv_pool_blocks`` or the slot
+    layout's exact capacity ``batch * pages_per_slot``."""
+    _, n_pages = paged_geometry(cfg, max_len)
+    return cfg.kv_pool_blocks or batch * n_pages
+
+
+def default_page_table(batch: int, pool_blocks: int) -> jax.Array:
+    """Linear identity table for a default-sized pool (blocks 0..B*pages-1,
+    slot ``b`` owning the contiguous run ``b*pages .. (b+1)*pages-1``) — the
+    layout bit-equivalent to the slot cache.  ``pool_blocks`` is the pool
+    leaf's leading dim INCLUDING the null block."""
+    n_pages = (pool_blocks - 1) // batch
+    return jnp.arange(batch * n_pages, dtype=jnp.int32).reshape(batch, n_pages)
+
+
+def init_kv_cache_paged(cfg, batch: int, max_len: int) -> Params:
+    """Shared-pool paged KV leaves (one layer): ``(P+1, hkv, bs, hd)``."""
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    bs, _ = paged_geometry(cfg, max_len)
+    p = paged_pool_blocks(cfg, batch, max_len) + 1   # + null block (last)
+    if cfg.kv_quant == "int8":
+        return {
+            "k": jnp.zeros((p, hkv, bs, hd), jnp.int8),
+            "v": jnp.zeros((p, hkv, bs, hd), jnp.int8),
+            "k_scale": jnp.zeros((p, hkv, bs, 1), jnp.float32),
+            "v_scale": jnp.zeros((p, hkv, bs, 1), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((p, hkv, bs, hd), cfg.dtype),
+        "v": jnp.zeros((p, hkv, bs, hd), cfg.dtype),
+    }
+
+
+def _paged_token_write(pool: jax.Array, new: jax.Array, page_table: jax.Array,
+                       pos: jax.Array, mask: jax.Array | None) -> jax.Array:
+    """Scatter one token per row into the pool.  ``new`` (b, hkv, w);
+    ``pos`` (b,) logical positions; rows with ``mask == False`` are routed to
+    the null block (last pool row) — their write never lands."""
+    b = new.shape[0]
+    bs = pool.shape[2]
+    null = pool.shape[0] - 1
+    blk = jnp.take_along_axis(page_table, (pos // bs)[:, None], axis=1)[:, 0]
+    if mask is not None:
+        blk = jnp.where(mask, blk, null)
+    return pool.at[blk, :, pos % bs].set(new.astype(pool.dtype))
+
+
+def _paged_chunk_write(pool: jax.Array, new: jax.Array, page_table: jax.Array,
+                       starts: jax.Array, q_lens: jax.Array) -> jax.Array:
+    """Per-row variable-length chunk scatter through the page table.
+
+    ``new`` (b, hkv, C, w); row ``b`` writes its first ``q_lens[b]`` chunk
+    tokens at logical positions ``starts[b] ..``; dead chunk positions are
+    routed to the null block, so a ``q_lens == 0`` row is exactly a no-op —
+    the paged counterpart of ``_chunk_write``'s read-modify-write masking.
+    """
+    b, _, c, _ = new.shape
+    bs = pool.shape[2]
+    null = pool.shape[0] - 1
+    n_pos = page_table.shape[1] * bs
+    j = jnp.arange(c, dtype=jnp.int32)
+    pos = jnp.clip(starts[:, None] + j[None, :], 0, n_pos - 1)   # (b, C)
+    live = j[None, :] < q_lens[:, None]
+    blk = jnp.take_along_axis(page_table, pos // bs, axis=1)     # (b, C)
+    blk = jnp.where(live, blk, null)
+    vals = new.transpose(0, 2, 1, 3)                             # (b, C, hkv, w)
+    return pool.at[blk, :, pos % bs].set(vals.astype(pool.dtype))
+
+
 def init_kv_cache(cfg, batch: int, max_len: int, d_model=None) -> Params:
+    if cfg.kv_layout == "paged":
+        return init_kv_cache_paged(cfg, batch, max_len)
     hkv, hd = cfg.n_kv_heads, cfg.head_dim
     if cfg.kv_quant == "int8":
         # per-(token, head) absmax scale over head_dim — the paper's
@@ -91,7 +183,14 @@ def kv_cache_slot_axes(cfg, axis: int = 1) -> Params:
     Callers stack per-layer caches along leading axes, so the request-slot
     axis of each leaf is ``axis`` (1 for a single (layers, B, ...) stack).
     Consumed by ``models.api.insert_request`` / ``evict_slot``.
+
+    Paged leaves are SHARED pools — no slot axis exists, marked with the
+    ``-1`` sentinel: insert/evict/per-row selects skip them (stale pool data
+    hides behind true-length masking at block granularity, and writes by
+    masked rows are routed to the null block instead of being reverted).
     """
+    if cfg.kv_layout == "paged":
+        axis = -1
     axes: Params = {"k": axis, "v": axis}
     if cfg.kv_quant == "int8":
         axes["k_scale"] = axis
@@ -117,6 +216,11 @@ def attn_prefill(cfg, p: Params, x: jax.Array, positions, cache: Params):
     With a sliding-window (rolling) cache smaller than the prompt, only the
     last ``cache_len`` tokens' K/V are retained — exactly the set SWA decode
     will ever attend to."""
+    if cfg.kv_layout == "paged":
+        raise ValueError(
+            "paged KV caches have no full-sequence prefill path — serve "
+            "through mixed_step/decode_step (chunked admission); the "
+            "standalone api.prefill is a slot-layout/training surface")
     b, s, _ = x.shape
     q, k, v = _project_qkv(cfg, p, x, positions)
     o = ops.attention(q, k, v, causal=True, window=cfg.window,
@@ -178,7 +282,8 @@ def _chunk_write(cache_leaf: jax.Array, new: jax.Array, starts: jax.Array,
 
 
 def attn_mixed(cfg, p: Params, x: jax.Array, positions, cache: Params,
-               lengths: jax.Array, q_lens: jax.Array):
+               lengths: jax.Array, q_lens: jax.Array, *,
+               page_table: jax.Array | None = None):
     """Mixed prefill/decode attention step.  x (b, C, d); ``lengths`` (b,) =
     valid cache tokens BEFORE this step; ``q_lens`` (b,) = live new tokens
     per row (1 = decoding row, up to C = mid-prefill row; the rest of the
@@ -188,12 +293,50 @@ def attn_mixed(cfg, p: Params, x: jax.Array, positions, cache: Params,
     scheduler's cache-room invariant), which also means a rolling-SWA buffer
     never wraps here — so the rolling case degenerates to the non-rolling
     one and ``cfg.window`` masking applies directly.
+
+    Paged layout: cache leaves are shared pools, ``page_table`` (b, pages)
+    routes both the chunk K/V scatter (dead positions to the null block) and
+    the kernels' logical→physical block translation.
     """
     b, c, _ = x.shape
     q, k, v = _project_qkv(cfg, p, x, positions)
     lengths = jnp.asarray(lengths, jnp.int32)
     q_lens = jnp.asarray(q_lens, jnp.int32)
     total = lengths + q_lens
+
+    if cfg.kv_layout == "paged":
+        if page_table is None:
+            page_table = default_page_table(b, cache["k"].shape[0])
+        if cfg.kv_quant == "int8":
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            new_cache = {
+                "k": _paged_chunk_write(cache["k"], kq, page_table,
+                                        lengths, q_lens),
+                "v": _paged_chunk_write(cache["v"], vq, page_table,
+                                        lengths, q_lens),
+                "k_scale": _paged_chunk_write(cache["k_scale"], ks,
+                                              page_table, lengths, q_lens),
+                "v_scale": _paged_chunk_write(cache["v_scale"], vs,
+                                              page_table, lengths, q_lens),
+            }
+            o = ops.mixed_attention(q, new_cache["k"], new_cache["v"], total,
+                                    q_lens, window=cfg.window,
+                                    k_scale=new_cache["k_scale"],
+                                    v_scale=new_cache["v_scale"],
+                                    page_table=page_table)
+        else:
+            new_cache = {
+                "k": _paged_chunk_write(cache["k"], k, page_table,
+                                        lengths, q_lens),
+                "v": _paged_chunk_write(cache["v"], v, page_table,
+                                        lengths, q_lens),
+            }
+            o = ops.mixed_attention(q, new_cache["k"], new_cache["v"], total,
+                                    q_lens, window=cfg.window,
+                                    page_table=page_table)
+        o = o.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * cfg.head_dim)
+        return linear(o, p["wo"], use_kernels=cfg.use_kernels), new_cache
 
     if cfg.kv_quant == "int8":
         kq, ks = quantize_kv(k)
@@ -221,13 +364,23 @@ def attn_mixed(cfg, p: Params, x: jax.Array, positions, cache: Params,
 
 
 def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
-                lengths: jax.Array):
+                lengths: jax.Array, *, page_table: jax.Array | None = None,
+                write_mask: jax.Array | None = None):
     """One-token decode.  x (b, 1, d); lengths (b,) = context length
-    *including* the new token."""
+    *including* the new token.
+
+    Paged layout: the new K/V scatters through ``page_table`` into the
+    shared pool; ``write_mask`` (b,) bool routes masked rows' writes to the
+    null block — the paged replacement for the slot layout's per-row
+    select-revert (a pool has no slot axis to select over).
+    """
     b = x.shape[0]
     q, k, v = _project_qkv(cfg, p, x, positions)
     # write the new K/V at position lengths-1 (static max-token addressing).
     lengths = jnp.asarray(lengths)
+    if cfg.kv_layout == "paged":
+        return _attn_decode_paged(cfg, p, q, k, v, cache, lengths,
+                                  page_table, write_mask)
     cache_len = cache["k"].shape[2]
     rolling = cfg.window is not None and cache_len <= cfg.window
 
@@ -237,7 +390,8 @@ def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
     from repro.parallel.hints import active_mesh
     mesh = active_mesh()
     if decode_attn.usable(mesh, b, cfg.n_heads, cfg.n_kv_heads,
-                          cache_len, lengths):
+                          cache_len, lengths,
+                          paged=cfg.kv_layout == "paged"):
         scales = ((cache["k_scale"], cache["v_scale"])
                   if cfg.kv_quant == "int8" else None)
         o, new_cache = decode_attn.decode_attention_sharded(
@@ -307,6 +461,58 @@ def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
     out = linear(o, p["wo"], use_kernels=cfg.use_kernels)
     return out, {"k": k_new, "v": v_new}
+
+
+def _attn_decode_paged(cfg, p: Params, q, k, v, cache: Params, lengths,
+                       page_table, write_mask):
+    """Paged one-token decode: scatter the new K/V through the page table,
+    then attend via the paged kernels.  Rolling SWA works transparently —
+    the modular slot index is just another logical position the table maps."""
+    b = q.shape[0]
+    bs = cache["k"].shape[2]
+    if page_table is None:
+        page_table = default_page_table(b, cache["k"].shape[0])
+    n_pos = page_table.shape[1] * bs     # addressable logical positions
+    lengths = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (b,))
+    rolling = cfg.window is not None and n_pos <= cfg.window
+    if rolling:
+        write_idx = (lengths - 1) % n_pos
+        attn_len = jnp.minimum(lengths, n_pos)
+        attn_window = None
+    else:
+        write_idx = jnp.clip(lengths - 1, 0, n_pos - 1)
+        attn_len = lengths
+        attn_window = cfg.window
+    if cfg.kv_quant == "int8":
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = {
+            "k": _paged_token_write(cache["k"], kq[:, :, 0], page_table,
+                                    write_idx, write_mask),
+            "v": _paged_token_write(cache["v"], vq[:, :, 0], page_table,
+                                    write_idx, write_mask),
+            "k_scale": _paged_token_write(cache["k_scale"], ks[:, :, 0],
+                                          page_table, write_idx, write_mask),
+            "v_scale": _paged_token_write(cache["v_scale"], vs[:, :, 0],
+                                          page_table, write_idx, write_mask),
+        }
+        o = ops.decode_attention(q, new_cache["k"], new_cache["v"], attn_len,
+                                 window=attn_window,
+                                 k_scale=new_cache["k_scale"],
+                                 v_scale=new_cache["v_scale"],
+                                 page_table=page_table)
+    else:
+        new_cache = {
+            "k": _paged_token_write(cache["k"], k[:, :, 0], page_table,
+                                    write_idx, write_mask),
+            "v": _paged_token_write(cache["v"], v[:, :, 0], page_table,
+                                    write_idx, write_mask),
+        }
+        o = ops.decode_attention(q, new_cache["k"], new_cache["v"], attn_len,
+                                 window=attn_window, page_table=page_table)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return linear(o, p["wo"], use_kernels=cfg.use_kernels), new_cache
 
 
 # -- cross attention (Whisper decoder) --------------------------------------

@@ -65,6 +65,15 @@ class ModelConfig:
     # extends the block-scale packing to the cache — KIVI-style)
     kv_quant: str = "none"            # none | int8
 
+    # KV cache layout (beyond-paper: EdgeLLM sizes every request for the MAX
+    # token count so instruction streams stay static; "paged" keeps that
+    # one-data-shape dispatch contract but leases fixed-size blocks from a
+    # shared pool via a per-slot page table, so short requests stop paying
+    # for long ones — vLLM-style paging on top of the slot cache)
+    kv_layout: str = "slot"           # slot | paged
+    kv_block_size: int = 16           # tokens per page (paged layout only)
+    kv_pool_blocks: int = 0           # shared-pool blocks (0 = B * pages/slot)
+
     # numerics / execution
     dtype: Any = jnp.bfloat16
     remat: str = "block"              # none | block
@@ -76,6 +85,10 @@ class ModelConfig:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
         if self.n_heads % max(self.n_kv_heads, 1):
             raise ValueError("n_heads must be divisible by n_kv_heads")
+        if self.kv_layout not in ("slot", "paged"):
+            raise ValueError(f"unknown kv_layout {self.kv_layout!r}")
+        if self.kv_layout == "paged" and self.kv_block_size < 1:
+            raise ValueError("kv_block_size must be >= 1 for paged layout")
 
     @property
     def is_moe(self) -> bool:

@@ -136,7 +136,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 
 def cache_slot_axes(cfg: ModelConfig) -> Params:
-    """Request-slot axis per cache leaf: (n_layers, B, hkv, L, hd) -> axis 1."""
+    """Request-slot axis per cache leaf: (n_layers, B, hkv, L, hd) -> axis 1
+    (paged layout: shared-pool leaves, marked -1 — no slot axis)."""
     return attention.kv_cache_slot_axes(cfg, axis=1)
 
 
@@ -269,7 +270,7 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 
 def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
-               tokens: jax.Array, lengths, q_lens):
+               tokens: jax.Array, lengths, q_lens, *, page_table=None):
     """Mixed prefill/decode step (one dispatch for the whole tick).
 
     tokens (B, C); ``lengths`` (B,) = valid cache tokens BEFORE this step;
@@ -277,7 +278,8 @@ def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
     C for a row mid-prefill (its chunk is ``tokens[b, :q_lens[b]]``, the
     rest padding).  Token j of row b sits at true position ``lengths[b]+j``
     (no left-pad bucket positions).  Returns (logits (B, V) of each row's
-    LAST live token, new cache).
+    LAST live token, new cache).  ``page_table`` (B, pages) routes paged
+    K/V placement (None = the linear default table).
     """
     b, c = tokens.shape
     x = embed_tokens(cfg, params, tokens)
@@ -291,7 +293,7 @@ def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
         bp, layer_cache = inp
         h, new_cache = attention.attn_mixed(
             cfg, bp["attn"], layers.apply_norm(cfg, bp["ln_attn"], carry),
-            pos, layer_cache, lengths, q_lens)
+            pos, layer_cache, lengths, q_lens, page_table=page_table)
         x2 = carry + h
         inner = layers.apply_norm(cfg, bp["ln_mlp"], x2)
         if cfg.is_moe:
@@ -310,9 +312,12 @@ def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
-                tokens: jax.Array, lengths):
+                tokens: jax.Array, lengths, *, page_table=None,
+                write_mask=None):
     """One decode step.  tokens (B, 1); lengths scalar or (B,) — context
-    length including this token.  Returns (logits (B, V), new cache)."""
+    length including this token.  Returns (logits (B, V), new cache).
+    Paged layout: ``page_table`` routes the K/V scatter; ``write_mask``
+    (B,) bool sends masked rows' writes to the null block."""
     b = tokens.shape[0]
     x = embed_tokens(cfg, params, tokens)
     lengths = jnp.asarray(lengths)
@@ -324,7 +329,8 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         bp, layer_cache = inp
         h, new_cache = attention.attn_decode(
             cfg, bp["attn"], layers.apply_norm(cfg, bp["ln_attn"], carry),
-            pos, layer_cache, lengths)
+            pos, layer_cache, lengths, page_table=page_table,
+            write_mask=write_mask)
         x2 = carry + h
         inner = layers.apply_norm(cfg, bp["ln_mlp"], x2)
         if cfg.is_moe:

@@ -197,7 +197,8 @@ def prefill(cfg: ModelConfig, params: Params, frames: jax.Array,
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
-                tokens: jax.Array, lengths):
+                tokens: jax.Array, lengths, *, page_table=None,
+                write_mask=None):
     b = tokens.shape[0]
     lengths = jnp.asarray(lengths)
     pos_scalar = (lengths - 1).reshape(-1, 1) * jnp.ones((b, 1), jnp.int32)
@@ -207,7 +208,8 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         bp, self_c, cross_c = inp
         h, new_self = attention.attn_decode(
             cfg, bp["self_attn"], layers.apply_norm(cfg, bp["ln_self"], carry),
-            pos_scalar, self_c, lengths)
+            pos_scalar, self_c, lengths, page_table=page_table,
+            write_mask=write_mask)
         x2 = carry + h
         h2 = attention.cross_attn_apply(
             cfg, bp["cross_attn"], layers.apply_norm(cfg, bp["ln_cross"], x2),

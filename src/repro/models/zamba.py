@@ -151,7 +151,8 @@ def _mamba_decode_scan(cfg, stacked: Params, x: jax.Array, caches: Params):
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
-                tokens: jax.Array, lengths):
+                tokens: jax.Array, lengths, *, page_table=None,
+                write_mask=None):
     b = tokens.shape[0]
     lengths = jnp.asarray(lengths)
     x = params["embed"][tokens]
@@ -165,7 +166,7 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
         sp = jax.tree.map(lambda a: a[sid], params["shared"])
         h, new_kv = attention.attn_decode(
             cfg, sp["attn"], layers.apply_norm(cfg, sp["ln_attn"], y),
-            pos, kv_c, lengths)
+            pos, kv_c, lengths, page_table=page_table, write_mask=write_mask)
         y = y + h
         y = y + layers.mlp_apply(
             cfg, sp["mlp"], layers.apply_norm(cfg, sp["ln_mlp"], y))

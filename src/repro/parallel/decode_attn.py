@@ -156,7 +156,17 @@ def decode_attention_sharded(
 
 
 def usable(mesh: Mesh | None, batch: int, hq: int, hkv: int, S: int,
-           lengths) -> bool:
+           lengths, *, paged: bool = False) -> bool:
+    """Whether the sequence-sharded decode path applies.
+
+    ``paged`` caches stay on the single-program path: the blocked walker
+    this module shares (``decode_blocked_partials``) already takes a
+    ``page_table``, but sequence-sharding a SHARED block pool needs a
+    block-home assignment (which shard owns which physical block) that the
+    engine's host allocator doesn't emit yet — see ROADMAP open items.
+    """
+    if paged:
+        return False
     if mesh is None or "model" not in mesh.axis_names:
         return False
     if jnp.asarray(lengths).ndim != 0:

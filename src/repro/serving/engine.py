@@ -45,12 +45,28 @@ dispatch instead:
   regardless of traffic (audio adds one ``("admit", F)`` encoder
   executable), the XLA analogue of the paper's per-token-length instruction
   streams with a MAX-token address space.
+
+* **Paged KV (``cfg.kv_layout == "paged"``).**  KV leaves become ONE shared
+  block pool; each slot addresses it through a row of the HOST-side page
+  table, which rides into every dispatch as a plain operand (the dispatch
+  shapes — and so the executable set — are unchanged: the paper's
+  one-data-shape contract survives paging).  Allocation is on-demand: a row
+  leases a block when its length crosses a block boundary, and retirement
+  returns the row's blocks to the free list.  Admission reserves each
+  request's WORST-CASE block count (``ceil(min(len + max_new, max_len) /
+  bs)``) up front — a request is only admitted when the unreserved free
+  blocks cover it, so a live row can always lease its next block and the
+  pool can never deadlock; requests held back by reservation count as
+  ``admission_stalls``.  Because slots no longer pin ``max_len`` rows each,
+  ``batch_size`` may exceed ``pool_tokens / max_len`` — short requests stop
+  paying for long ones, which is the capacity lever
+  ``benchmarks/serving_bench.py --paged-capacity`` measures.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-import queue
 import time
 from typing import Any, Callable
 
@@ -98,9 +114,29 @@ def _mixed_executable(cfg: ModelConfig):
     return jax.jit(fn, donate_argnums=(1,))
 
 
+def _mixed_executable_paged(cfg: ModelConfig):
+    def fn(p, c, tokens, lengths, q_lens, page_table):
+        logits, new_c = api.mixed_step(cfg, p, c, tokens, lengths, q_lens,
+                                       page_table=page_table)
+        return jnp.argmax(logits, axis=-1), logits, new_c
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 def _decode_executable(cfg: ModelConfig):
     def fn(p, c, tokens, lengths):
         logits, new_c = api.decode_step(cfg, p, c, tokens, lengths)
+        return jnp.argmax(logits, axis=-1), logits, new_c
+    return jax.jit(fn, donate_argnums=(1,))
+
+
+def _decode_executable_paged(cfg: ModelConfig):
+    # write_mask keeps non-advancing rows (retired slots riding along, rows
+    # between ticks) from writing through a stale/parked page table entry —
+    # the paged replacement for "stale rows hide behind true-length masking"
+    def fn(p, c, tokens, lengths, page_table, write_mask):
+        logits, new_c = api.decode_step(cfg, p, c, tokens, lengths,
+                                        page_table=page_table,
+                                        write_mask=write_mask)
         return jnp.argmax(logits, axis=-1), logits, new_c
     return jax.jit(fn, donate_argnums=(1,))
 
@@ -148,16 +184,38 @@ class Engine:
         # a shared compile cache must come from an engine with the same
         # (cfg, max_len, batch, chunk_size): executables bake these in
         self.cache_compiles = compile_cache or CompileCache()
-        self._queue: "queue.Queue[Request]" = queue.Queue()
+        self._queue: "collections.deque[Request]" = collections.deque()
         # the resident slot cache (pure-KV slots are reset lazily — stale
         # rows hide behind true-length masking; stateful families are reset
         # at admission via insert_request)
         self.cache = api.init_cache(cfg, batch_size, max_len)
         self._slots = [_Slot() for _ in range(batch_size)]
+        # paged-KV bookkeeping: host free list + page table (see module doc)
+        self.paged = api.has_paged_kv(cfg)
+        # batch-1 admission rows: their paged pool leaves are SKIPPED by
+        # insert_request (axis -1), so build them from a minimal-pool cfg —
+        # otherwise a stateful paged engine would hold a dead duplicate of
+        # the whole serving pool for its lifetime
+        self._row_cfg = (dataclasses.replace(cfg, kv_pool_blocks=1)
+                         if self.paged else cfg)
         # pristine batch-1 row for stateful-family admission resets
-        self._fresh_row = (api.init_cache(cfg, 1, max_len)
+        self._fresh_row = (api.init_cache(self._row_cfg, 1, max_len)
                            if api.needs_admission_insert(cfg) and
                            cfg.family != "audio" else None)
+        if self.paged:
+            from repro.models.attention import (paged_geometry,
+                                                paged_pool_blocks)
+            self.block_size, self.n_pages = paged_geometry(cfg, max_len)
+            self.pool_blocks = paged_pool_blocks(cfg, batch_size, max_len)
+            self._null_block = self.pool_blocks      # last pool row
+            self._free_blocks = list(range(self.pool_blocks))
+            self._page_table = np.full((batch_size, self.n_pages),
+                                       self._null_block, np.int32)
+            self._slot_blocks: list[list[int]] = [[] for _ in
+                                                  range(batch_size)]
+            self._slot_reserve = [0] * batch_size    # worst-case not-yet-leased
+        self.admission_stalls = 0    # admissions held back by the block pool
+        self.peak_resident_tokens = 0
         self.steps = 0
         self.dispatches = 0          # must equal steps: one dispatch per tick
         self.mixed_ticks = 0
@@ -172,8 +230,13 @@ class Engine:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
                 f"engine max_len {self.max_len} — raise max_len or truncate")
+        if self.paged and self._worst_case_blocks(req) > self.pool_blocks:
+            raise ValueError(
+                f"request {req.rid}: worst case needs "
+                f"{self._worst_case_blocks(req)} KV blocks but the pool has "
+                f"{self.pool_blocks} — raise kv_pool_blocks")
         req.submitted_at = time.monotonic()
-        self._queue.put(req)
+        self._queue.append(req)
 
     @property
     def compile_budget(self) -> int:
@@ -189,13 +252,60 @@ class Engine:
     # -- executables (all memoized: misses bounded by compile_budget) --------
 
     def _build_mixed(self):
-        return _mixed_executable(self.cfg)
+        return (_mixed_executable_paged(self.cfg) if self.paged
+                else _mixed_executable(self.cfg))
 
     def _build_decode(self):
-        return _decode_executable(self.cfg)
+        return (_decode_executable_paged(self.cfg) if self.paged
+                else _decode_executable(self.cfg))
 
     def _build_insert(self):
         return _insert_executable(self.cfg)
+
+    # -- paged-KV block accounting -------------------------------------------
+
+    def _worst_case_blocks(self, req: Request) -> int:
+        """Blocks the request can ever hold: its prompt plus full generation,
+        capped by the cache's addressable span (the ``_emit`` stop rules)."""
+        toks = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        return -(-toks // self.block_size)
+
+    def _can_reserve(self, req: Request) -> bool:
+        """Admission gate: unreserved free blocks must cover the request's
+        worst case.  Every admitted row can then ALWAYS lease its next block
+        (``sum(reserve) <= len(free)`` is invariant), so decode never stalls
+        and the pool never deadlocks — pressure shows up as admission
+        stalls, never as a stuck batch."""
+        free = len(self._free_blocks) - sum(self._slot_reserve)
+        return self._worst_case_blocks(req) <= free
+
+    def _lease_to(self, idx: int, new_len: int) -> None:
+        """Grow slot ``idx`` to cover ``new_len`` tokens, leasing blocks as
+        the length crosses page boundaries (on-demand allocation)."""
+        need = -(-new_len // self.block_size)
+        owned = self._slot_blocks[idx]
+        while len(owned) < need:
+            if not self._free_blocks:   # _can_reserve makes this unreachable
+                raise RuntimeError("paged KV pool exhausted despite "
+                                   "reservation — allocator invariant broken")
+            blk = self._free_blocks.pop()
+            self._page_table[idx, len(owned)] = blk
+            owned.append(blk)
+            self._slot_reserve[idx] -= 1
+            if self._slot_reserve[idx] < 0:
+                raise RuntimeError(
+                    f"slot {idx} leased past its reservation — worst-case "
+                    "accounting is wrong")
+
+    def pool_stats(self) -> dict[str, int]:
+        """Free-list invariants, exposed for leak/double-free checks."""
+        leased = sum(len(b) for b in self._slot_blocks)
+        return {
+            "total": self.pool_blocks,
+            "free": len(self._free_blocks),
+            "leased": leased,
+            "reserved_outstanding": sum(self._slot_reserve),
+        }
 
     # -- internals -----------------------------------------------------------
 
@@ -209,7 +319,19 @@ class Engine:
         pure-KV rows hide behind true-length masking and stateful rows are
         reset by the next admission's ``insert_request`` — so retirement
         costs no device dispatch.  The dead row rides along in later ticks
-        at q_len 0 / its parked length; its output is ignored."""
+        at q_len 0 / its parked length; its output is ignored.  Paged: the
+        row's blocks return to the free list and its page-table row is
+        pointed at the null block, so a stale lease can never alias a block
+        the next occupant is handed."""
+        if self.paged:
+            for blk in self._slot_blocks[idx]:
+                if blk in self._free_blocks:
+                    raise RuntimeError(
+                        f"double free of KV block {blk} (slot {idx})")
+                self._free_blocks.append(blk)
+            self._slot_blocks[idx] = []
+            self._slot_reserve[idx] = 0
+            self._page_table[idx, :] = self._null_block
         self._slots[idx] = _Slot()
 
     def _admit(self, req: Request, idx: int) -> None:
@@ -217,13 +339,15 @@ class Engine:
         the prompt streams through subsequent mixed ticks.  Stateful
         families scatter a fresh ``request_cache`` row into the slot first
         (recurrent-state reset; audio also carries the request's cross-KV)."""
+        if self.paged:
+            self._slot_reserve[idx] = self._worst_case_blocks(req)
         if api.needs_admission_insert(self.cfg):
             if self.cfg.family == "audio":
                 f = np.asarray(req.frames)
                 frames = jnp.asarray(f[None] if f.ndim == 2 else f)
                 admit = self.cache_compiles.get(
                     "admit", frames.shape[1],
-                    lambda: _admit_executable(self.cfg, self.max_len))
+                    lambda: _admit_executable(self._row_cfg, self.max_len))
                 row = admit(self.params, frames)
             else:
                 row = self._fresh_row
@@ -292,17 +416,31 @@ class Engine:
         completed: list[Request] = []
         start_steps = self.steps       # max_steps bounds THIS call, not the
         while self.steps - start_steps < max_steps:  # engine's lifetime
-            # 1. continuous refill: admit queued requests into free slots
+            # 1. continuous refill: admit queued requests into free slots.
+            # Paged: strict-FIFO admission gated on the worst-case block
+            # reservation — a held-back head request is an admission stall
             for i in range(self.batch):
-                if self._slots[i].req is None and not self._queue.empty():
-                    self._admit(self._queue.get(), i)
+                if self._slots[i].req is None and self._queue:
+                    if self.paged and not self._can_reserve(self._queue[0]):
+                        self.admission_stalls += 1
+                        break
+                    self._admit(self._queue.popleft(), i)
             live = [i for i, s in enumerate(self._slots) if s.req is not None]
             if not live:
-                break  # queue drained and no row in flight
+                break  # queue drained (or fully stalled) and no row in flight
             chunks = self._schedule_chunks()
             stall = (self.prefill_policy == "stall" and any(chunks))
             decoding = [i for i in live
                         if not self._slots[i].prefilling and not stall]
+            if self.paged:
+                # on-demand leases for every row advancing this tick (the
+                # admission reservation guarantees these succeed)
+                for i, s in enumerate(self._slots):
+                    if chunks[i]:
+                        self._lease_to(i, s.length + chunks[i])
+                    elif i in decoding:
+                        self._lease_to(i, s.length + 1)
+                page_table = jnp.asarray(self._page_table)
 
             if any(chunks):
                 # 2a. mixed tick: prompt chunks + decode rows, one dispatch
@@ -320,9 +458,12 @@ class Engine:
                         q_lens[i] = 1
                         tokens[i, 0] = s.last_token
                 fn = self.cache_compiles.get("mixed", w, self._build_mixed)
+                args = (jnp.asarray(tokens), jnp.asarray(lengths),
+                        jnp.asarray(q_lens))
+                if self.paged:
+                    args += (page_table,)
                 next_tok, logits, self.cache = fn(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(lengths), jnp.asarray(q_lens))
+                    self.params, self.cache, *args)
                 self.mixed_ticks += 1
             else:
                 # 2b. pure-decode tick: the classic executable (bit-identical
@@ -335,13 +476,21 @@ class Engine:
                     np.int32, self.batch)
                 fn = self.cache_compiles.get("decode", self.batch,
                                              self._build_decode)
+                args = (jnp.asarray(tokens), jnp.asarray(lengths))
+                if self.paged:
+                    adv = np.zeros(self.batch, bool)
+                    adv[decoding] = True
+                    args += (page_table, jnp.asarray(adv))
                 next_tok, logits, self.cache = fn(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(lengths))
+                    self.params, self.cache, *args)
 
             self.steps += 1
             self.dispatches += 1
             self._occupancy_sum += len(live) / self.batch
+            self.peak_resident_tokens = max(
+                self.peak_resident_tokens,
+                sum(self._slots[i].length + chunks[i] + (i in decoding)
+                    for i in live))
             next_np = np.asarray(next_tok)
             logits_np = None if sample is None else np.asarray(logits)
 

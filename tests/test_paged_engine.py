@@ -1,0 +1,193 @@
+"""Paged-KV serving-engine tests: a randomized admission/retire soak under
+pool pressure (checked token-for-token against ``reference_decode``, with
+free-list leak/double-free invariants), slot-reuse safety across all four
+families (evict mid-run, readmit a different-length prompt into the same
+slot and blocks), and the allocator's reservation guarantees."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.compiler import CompileCache
+from repro.models import api
+from repro.serving.engine import Engine, Request, reference_decode
+
+# shared so the oracle compiles once per (family, kv_quant, layout) key
+_REF_CC = {}
+
+
+def _oracle_cc(key):
+    return _REF_CC.setdefault(key, CompileCache())
+
+
+def _tiny_cfg(**over):
+    return get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
+                            kv_layout="paged", kv_block_size=8, **over)
+
+
+def _assert_pool_intact(engine):
+    stats = engine.pool_stats()
+    assert stats["leased"] == 0 and stats["reserved_outstanding"] == 0
+    free = engine._free_blocks
+    assert len(free) == engine.pool_blocks, "free list leaked blocks"
+    assert sorted(free) == list(range(engine.pool_blocks)), \
+        "free list holds duplicate or foreign block ids"
+
+
+def _assert_oracle_parity(cfg, params, done, max_len, key):
+    for r in done:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=max_len, frames=r.frames,
+                               compile_cache=_oracle_cc(key))
+        assert r.output == ref, \
+            f"req {r.rid} diverged from the fresh-cache batch-1 oracle"
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "int8"])
+def test_engine_soak_randomized(kv_quant):
+    """Randomized admission/retire schedule under pool pressure: mixed
+    prompt lengths, staggered mid-flight retirements (and the slot/block
+    reuse they trigger), a pool too small to hold every request's worst
+    case at once — every finished request must match ``reference_decode``
+    token for token, and the free list must come back whole."""
+    cfg = _tiny_cfg(kv_quant=kv_quant, kv_pool_blocks=12)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    max_len = 48
+    rng = np.random.default_rng(7)
+    engine = Engine(cfg, params, batch_size=5, max_len=max_len, chunk_size=8)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(3, 21))
+                                        ).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 7)))
+            for i in range(14)]
+    for r in reqs:
+        engine.submit(r)
+
+    # drain in bursts so pool invariants are checked mid-flight too
+    while True:
+        engine.run(max_steps=3)
+        stats = engine.pool_stats()
+        assert stats["free"] + stats["leased"] == stats["total"]
+        assert stats["reserved_outstanding"] <= stats["free"], \
+            "reservation invariant violated: an admitted row could stall"
+        if sum(r.done for r in reqs) == len(reqs):
+            break
+        assert engine.steps < 2000, "engine stopped making progress"
+
+    assert engine.admission_stalls > 0, (
+        "soak parameters lost their pool pressure — shrink kv_pool_blocks")
+    _assert_pool_intact(engine)
+    _assert_oracle_parity(cfg, params, reqs, max_len,
+                          ("soak", kv_quant))
+
+
+ARCHS = ["qwen-7b", "xlstm-1.3b", "zamba2-7b", "whisper-small"]
+
+
+@pytest.mark.parametrize("arch", ARCHS + ["qwen-7b-int8"])
+def test_slot_reuse_readmission(arch):
+    """Evict a row mid-decode (staggered finishes force it), readmit a
+    DIFFERENT-length prompt into the same slot — and, paged, into recycled
+    physical blocks under a different page-table assignment.  Every
+    request must match a fresh-cache oracle run exactly."""
+    kv_quant = "int8" if arch.endswith("-int8") else "none"
+    name = arch.removesuffix("-int8")
+    cfg = get_smoke_config(name, kv_quant=kv_quant, kv_layout="paged",
+                           kv_block_size=8)
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    max_len = 40
+    rng = np.random.default_rng(11)
+
+    def mk(rid, plen, max_new):
+        frames = None
+        if cfg.family == "audio":
+            frames = rng.normal(size=(cfg.encoder_frames, cfg.d_model)
+                                ).astype(np.float32)
+        return Request(rid=rid,
+                       prompt=rng.integers(0, cfg.vocab_size, plen
+                                           ).astype(np.int32),
+                       max_new_tokens=max_new, frames=frames)
+
+    # batch 2, 4 requests of different lengths: rid 0 retires first (short),
+    # rid 2 readmits into its slot while rid 1 is still mid-decode; rid 3
+    # then reuses whichever slot frees next
+    reqs = [mk(0, 4, 2), mk(1, 9, 8), mk(2, 13, 3), mk(3, 6, 4)]
+    engine = Engine(cfg, params, batch_size=2, max_len=max_len, chunk_size=6)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert len(done) == len(reqs)
+    if engine.paged:
+        _assert_pool_intact(engine)
+    _assert_oracle_parity(cfg, params, reqs, max_len, (name, kv_quant))
+
+
+def test_paged_matches_slot_engine_tokens():
+    """Same workload through a slot engine and a paged engine (scrambling
+    leases via staggered retirement): identical output streams."""
+    cfg_slot = get_smoke_config("qwen-7b", d_model=64, d_ff=128,
+                                vocab_size=256)
+    cfg_paged = dataclasses.replace(cfg_slot, kv_layout="paged",
+                                    kv_block_size=8)
+    params = api.init_params(cfg_slot, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg_slot.vocab_size,
+                            int(rng.integers(3, 15))).astype(np.int32)
+               for _ in range(6)]
+
+    def run(cfg):
+        engine = Engine(cfg, params, batch_size=3, max_len=32, chunk_size=6)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=3 + (i % 3))
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            engine.submit(r)
+        engine.run()
+        return [r.output for r in reqs]
+
+    assert run(cfg_slot) == run(cfg_paged)
+
+
+# ---------------------------------------------------------------------------
+# allocator unit guarantees
+# ---------------------------------------------------------------------------
+
+def _alloc_engine(**over):
+    cfg = _tiny_cfg(**over)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, batch_size=3, max_len=32, chunk_size=4)
+
+
+def test_oversized_request_rejected_at_submit():
+    engine = _alloc_engine(kv_pool_blocks=2)        # 16-token pool
+    with pytest.raises(ValueError, match="KV blocks"):
+        engine.submit(Request(rid=0, prompt=np.arange(20, dtype=np.int32),
+                              max_new_tokens=8))
+
+
+def test_double_free_detected():
+    engine = _alloc_engine()
+    engine._slots[0].req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
+    engine._slot_reserve[0] = 2
+    engine._lease_to(0, 9)                 # 2 blocks
+    engine._slot_blocks[0].append(engine._free_blocks[0])  # corrupt: alias
+    with pytest.raises(RuntimeError, match="double free"):
+        engine._free_slot(0)
+
+
+def test_lease_respects_page_table():
+    engine = _alloc_engine()
+    engine._slots[0].req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
+    engine._slot_reserve[0] = 3
+    engine._lease_to(0, 17)                # 3 blocks (bs=8)
+    owned = engine._slot_blocks[0]
+    assert len(owned) == 3 and len(set(owned)) == 3
+    np.testing.assert_array_equal(engine._page_table[0, :3], owned)
+    assert (engine._page_table[0, 3:] == engine._null_block).all()
+    assert (engine._page_table[1:] == engine._null_block).all()
+    engine._free_slot(0)
+    assert (engine._page_table[0] == engine._null_block).all()
+    _assert_pool_intact(engine)
