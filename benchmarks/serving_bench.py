@@ -291,6 +291,100 @@ def run_paged_capacity(cfg, params, *, max_len: int = 64,
 
 
 # ---------------------------------------------------------------------------
+# speculative-decoding mode (prompt-lookup drafts through the mixed dispatch)
+# ---------------------------------------------------------------------------
+
+def _spec_workload(cfg, n_requests: int, max_new: int, seed: int = 0):
+    """Repetition-heavy cut: prompts are a short n-gram pattern tiled a few
+    times, and the generation budget is long.  Tiled prompts give the
+    prompt-lookup drafter immediate matches, and a deterministic greedy
+    model run long enough falls into token cycles the drafter then predicts
+    from the row's own emitted history — the synthetic stand-in for the
+    copied spans / boilerplate / format scaffolding that make real LLM
+    output locally repetitive."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n_requests):
+        pat = rng.integers(0, cfg.vocab_size, int(rng.integers(3, 6)))
+        reqs.append((np.tile(pat, 4).astype(np.int32), max_new))
+    return reqs
+
+
+def run_spec(cfg, params, *, batch: int = 4, max_len: int = 128,
+             max_new: int = 96, n_requests: int = 12,
+             ks: tuple = (2, 4, 8), repeats: int = 7) -> dict:
+    """Plain-decode baseline vs draft depths K — same workload, same greedy
+    outputs (checked), fewer weight streams per emitted token.
+
+    Each depth's run is only ~100 dispatches at smoke scale, so a single
+    wall-clock sample is scheduler noise.  Every depth (baseline included)
+    is re-run ``repeats`` times with the runs INTERLEAVED round-robin, and
+    each speedup is the MEDIAN of per-cycle PAIRED ratios (depth-K's sample
+    over the baseline sample from the SAME cycle): machine state is shared
+    within a cycle, so load/frequency drift cancels out of each ratio, and
+    the median rejects cycles that drifted mid-cycle.  ``tokens_per_s`` is
+    best-of for each depth (tokens, dispatches and acceptance are
+    deterministic across runs)."""
+    workload = _spec_workload(cfg, n_requests, max_new)
+    depths = (0,) + tuple(ks)
+    # spec and non-spec engines bind DIFFERENT executables under the same
+    # ("mixed", W) keys — one shared compile cache per variant, not per K
+    caches = {False: CompileCache(), True: CompileCache()}
+
+    def run_once(k):
+        engine = Engine(cfg, params, batch_size=batch, max_len=max_len,
+                        chunk_size=16, spec_k=k,
+                        compile_cache=caches[bool(k)])
+        for rid, (prompt, mn) in enumerate(workload):
+            engine.submit(Request(rid=rid, prompt=prompt,
+                                  max_new_tokens=mn))
+        t0 = time.perf_counter()
+        done = engine.run()
+        return time.perf_counter() - t0, engine, done
+
+    results = {}
+    for k in depths:                     # warm pass compiles + records stats
+        _, engine, done = run_once(k)
+        results[k] = {
+            "spec_k": k,
+            "tokens": sum(len(r.output) - 1 for r in done),
+            "dispatches": engine.dispatches,
+            "outputs": {r.rid: [int(t) for t in r.output] for r in done},
+        }
+        if k:
+            s = engine.spec_stats()
+            results[k].update(
+                {f: s[f] for f in ("draft_tokens", "accepted_tokens",
+                                   "acceptance_rate",
+                                   "accepted_per_dispatch", "rewinds")})
+    samples = {k: [] for k in depths}
+    for _ in range(repeats):             # interleaved timing cycles
+        for k in depths:
+            samples[k].append(run_once(k)[0])
+    for k in depths:
+        results[k]["tokens_per_s"] = results[k]["tokens"] / min(samples[k])
+
+    base = results[0]
+    base_outputs = base.pop("outputs")
+    trials = []
+    for k in ks:
+        r = results[k]
+        r["outputs_match_baseline"] = r.pop("outputs") == base_outputs
+        ratios = sorted(samples[0][i] / samples[k][i]
+                        for i in range(repeats))
+        r["speedup_vs_plain"] = ratios[repeats // 2]
+        trials.append(r)
+    return {
+        "config": {"arch": cfg.name, "batch": batch, "max_len": max_len,
+                   "max_new": max_new, "n_requests": n_requests,
+                   "repeats": repeats},
+        "baseline": base,
+        "spec": trials,
+        "best_speedup": max(t["speedup_vs_plain"] for t in trials),
+    }
+
+
+# ---------------------------------------------------------------------------
 # drivers
 # ---------------------------------------------------------------------------
 
@@ -308,7 +402,7 @@ def rows() -> list[tuple[str, float, str]]:
                              kv_quant="int8")
     batched_q = bench_batched(cfg_q, params, workload, batch=4, max_len=64)
     mixed = run_mixed(cfg, params)
-    return [
+    out = [
         ("serving/per_request_tok", 1e6 / base["tokens_per_s"],
          f"tok_s={base['tokens_per_s']:.1f}"),
         ("serving/batched_b4_tok", 1e6 / batched["tokens_per_s"],
@@ -323,6 +417,15 @@ def rows() -> list[tuple[str, float, str]]:
         ("serving/mixed_itl_p99_us", mixed["mixed"]["itl_p99_ms"] * 1e3,
          f"vs_stall={mixed['itl_p99_speedup']:.2f}x"),
     ]
+    spec = run_spec(cfg, params, n_requests=4, max_new=32, ks=(4,))
+    k4 = spec["spec"][0]
+    out.append(
+        ("serving/spec_k4_tok", 1e6 / k4["tokens_per_s"],
+         f"tok_s={k4['tokens_per_s']:.1f} "
+         f"accept={k4['acceptance_rate']:.2f} "
+         f"speedup={k4['speedup_vs_plain']:.2f}x "
+         f"match={k4['outputs_match_baseline']}"))
+    return out
 
 
 def run_smoke(path: str = "BENCH_serving.json") -> dict:
@@ -341,6 +444,9 @@ def run_smoke(path: str = "BENCH_serving.json") -> dict:
     # paged-KV capacity cut: strictly more admissible resident tokens than
     # the slot layout at the same KV HBM budget (the acceptance record)
     record["paged_capacity"] = run_paged_capacity(cfg, params)
+    # speculative-decoding cut: accepted tokens/dispatch and decode tok/s at
+    # K in {2, 4, 8} on the repetition-heavy workload, plain decode baseline
+    record["speculative"] = run_spec(cfg, params)
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
     print(json.dumps(record, indent=2, sort_keys=True))
@@ -349,7 +455,8 @@ def run_smoke(path: str = "BENCH_serving.json") -> dict:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="mixed", choices=["mixed", "throughput"])
+    ap.add_argument("--mode", default="mixed",
+                    choices=["mixed", "throughput", "spec"])
     ap.add_argument("--arch", default="qwen-7b")
     ap.add_argument("--batches", default="1,2,4,8")
     ap.add_argument("--queue-depths", default="8,16")
@@ -384,6 +491,26 @@ def main() -> None:
         print(f"paged resident-token capacity: {gain:.2f}x the slot layout "
               f"at equal HBM (stalls: paged={rec['paged']['admission_stalls']}"
               f" slot={rec['slot']['admission_stalls']})")
+        return
+
+    if args.mode == "spec":
+        rec = run_spec(cfg, params, max_len=args.max_len)
+        print(f"arch={cfg.name} max_len={args.max_len} "
+              f"workload={rec['config']['n_requests']} reqs x "
+              f"{rec['config']['max_new']} new tokens (repetition-heavy)")
+        print(f"{'spec_k':>6} {'tok/s':>8} {'disp':>6} {'accept':>7} "
+              f"{'acc/disp':>8} {'rewinds':>7} {'speedup':>8} {'match':>6}")
+        b = rec["baseline"]
+        print(f"{0:>6} {b['tokens_per_s']:>8.1f} {b['dispatches']:>6} "
+              f"{'-':>7} {'-':>8} {'-':>7} {'1.00x':>8} {'-':>6}")
+        for t in rec["spec"]:
+            print(f"{t['spec_k']:>6} {t['tokens_per_s']:>8.1f} "
+                  f"{t['dispatches']:>6} {t['acceptance_rate']:>7.2f} "
+                  f"{t['accepted_per_dispatch']:>8.2f} {t['rewinds']:>7} "
+                  f"{t['speedup_vs_plain']:>7.2f}x "
+                  f"{str(t['outputs_match_baseline']):>6}")
+        print(f"best decode throughput: {rec['best_speedup']:.2f}x plain "
+              f"decode (same greedy outputs)")
         return
 
     if args.mode == "mixed":

@@ -3,10 +3,15 @@
 
 All requests share one slot-based KV cache; each step is a single jitted
 decode over every slot with per-row lengths, and finished slots are
-refilled from the queue mid-flight.
+refilled from the queue mid-flight.  Pass ``--spec`` to layer speculative
+decoding on top: prompt-lookup drafts verified K+1 tokens at a time
+through the same mixed dispatch (greedy outputs are identical token for
+token — only the dispatch count changes).
 
-Run:  PYTHONPATH=src python examples/serve.py
+Run:  PYTHONPATH=src python examples/serve.py [--spec] [--spec-k 4]
 """
+
+import argparse
 
 import numpy as np
 import jax
@@ -18,11 +23,21 @@ from repro.serving.engine import Engine, Request
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding (prompt-lookup drafts)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per verify row")
+    ap.add_argument("--drafter", default="plookup")
+    args = ap.parse_args()
+
     cfg = get_smoke_config("qwen-7b", d_model=256, d_ff=512, vocab_size=1024)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     qparams = quantize_model(params, "strategy2")   # W4A16 + log-scale sparse
 
-    engine = Engine(cfg, qparams, batch_size=4, max_len=128)
+    engine = Engine(cfg, qparams, batch_size=4, max_len=128,
+                    spec_k=args.spec_k if args.spec else 0,
+                    drafter=args.drafter)
     rng = np.random.default_rng(0)
     for rid in range(8):
         prompt = rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
@@ -36,6 +51,13 @@ def main() -> None:
     print(f"scheduler: {engine.steps} batched ticks "
           f"({engine.dispatches} dispatches, {engine.mixed_ticks} mixed), "
           f"slot occupancy {engine.slot_occupancy:.2f}")
+    if engine.spec_k:
+        s = engine.spec_stats()
+        print(f"speculation: K={s['spec_k']}, "
+              f"{s['accepted_per_dispatch']:.2f} accepted tokens/dispatch, "
+              f"acceptance {s['acceptance_rate']:.2f} "
+              f"({s['accepted_tokens']}/{s['draft_tokens']} drafts, "
+              f"{s['rewinds']} rewinds)")
     print(f"compile cache: {len(engine.cache_compiles)} executables, "
           f"{engine.cache_compiles.hits} hits / "
           f"{engine.cache_compiles.misses} misses (dynamic compilation)")

@@ -36,6 +36,13 @@ def main() -> None:
                     help="tokens per KV page (paged layout)")
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
                     help="shared-pool blocks (0 = batch * pages per slot)")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative decoding: prompt-lookup drafts "
+                         "verified through the mixed dispatch")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per verify row (with --spec)")
+    ap.add_argument("--drafter", default="plookup",
+                    help="draft proposer registry name (serving/draft.py)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -49,7 +56,12 @@ def main() -> None:
     print(f"arch={cfg.name} packed={quantized_bytes(params)/1e6:.1f} MB "
           f"strategy={args.strategy}")
 
-    engine = Engine(cfg, params, batch_size=args.batch, max_len=args.max_len)
+    engine = Engine(cfg, params, batch_size=args.batch, max_len=args.max_len,
+                    spec_k=args.spec_k if args.spec else 0,
+                    drafter=args.drafter)
+    if args.spec and not engine.spec_k:
+        print(f"speculation requested but family {cfg.family!r} has no "
+              "rewindable sequence dimension — plain decode fallback")
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
         engine.submit(Request(
@@ -62,6 +74,14 @@ def main() -> None:
     print(f"scheduler: {engine.steps} ticks, {engine.dispatches} dispatches "
           f"(1 per tick, {engine.mixed_ticks} mixed), slot occupancy "
           f"{engine.slot_occupancy:.2f}")
+    if engine.spec_k:
+        s = engine.spec_stats()
+        print(f"speculation: K={s['spec_k']} drafter={args.drafter} — "
+              f"{s['accepted_tokens']}/{s['draft_tokens']} drafts accepted "
+              f"({s['acceptance_rate']:.2f}), "
+              f"{s['accepted_per_dispatch']:.2f} accepted tokens/dispatch "
+              f"over {s['spec_ticks']} verify ticks, "
+              f"{s['rewinds']} rewinds")
     print(f"compile cache: {sorted(engine.cache_compiles.keys())} "
           f"({engine.cache_compiles.hits} hits, "
           f"misses by kind {engine.cache_compiles.misses_by_name})")

@@ -225,8 +225,25 @@ def needs_admission_insert(cfg: ModelConfig) -> bool:
     return cfg.family in ("ssm", "hybrid", "audio")
 
 
+def supports_speculation(cfg: ModelConfig) -> bool:
+    """Whether draft-then-verify serving can run on this config.
+
+    Speculation needs a REWINDABLE sequence dimension: after a partial
+    accept the engine shrinks ``lengths[b]`` and the rejected tail must
+    become invisible.  Pure-KV families (transformer + whisper, whose
+    decoder self-attention is plain KV and whose cross-KV is static per
+    request) get this for free — stale cache positions past ``lengths``
+    already hide behind true-length masking, so rollback is host-side
+    bookkeeping only.  Recurrent families (ssm, hybrid) fold every token
+    irreversibly into O(1) state — there is nothing to rewind to — so the
+    engine must fall back to plain decode for them.
+    """
+    return cfg.family in _TRANSFORMER_FAMILIES + ("audio",)
+
+
 def _mixed_step_scan(cfg: ModelConfig, params: Params, cache: Params,
-                     tokens: jax.Array, lengths, q_lens, page_table=None):
+                     tokens: jax.Array, lengths, q_lens, page_table=None,
+                     all_logits: bool = False):
     """Generic mixed step for recurrent/stateful families.
 
     Scans the chunk axis INSIDE one jitted call (still one device dispatch
@@ -265,26 +282,41 @@ def _mixed_step_scan(cfg: ModelConfig, params: Params, cache: Params,
             return jnp.where(active.reshape(shape), n, old)
 
         cur = jax.tree.map(sel, new, cur, axes)
-        logits = jnp.where((j == q_lens - 1)[:, None],
-                           lg.astype(logits.dtype), logits)
+        if all_logits:
+            # verify surface: keep every position's logits (B, C, V); rows
+            # past their q_len keep zeros (their step re-ran the final
+            # position — masked here so callers see a clean pad)
+            logits = jax.lax.dynamic_update_slice(
+                logits,
+                jnp.where(active[:, None], lg.astype(logits.dtype),
+                          0)[:, None],
+                (0, j, 0))
+        else:
+            logits = jnp.where((j == q_lens - 1)[:, None],
+                               lg.astype(logits.dtype), logits)
         return (cur, logits), None
 
-    init_logits = jnp.zeros((b, cfg.vocab_size), cfg.dtype)
+    shape = (b, c, cfg.vocab_size) if all_logits else (b, cfg.vocab_size)
+    init_logits = jnp.zeros(shape, cfg.dtype)
     (cache, logits), _ = jax.lax.scan(
         body, (cache, init_logits), jnp.arange(c, dtype=jnp.int32))
     return logits, cache
 
 
 def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
-               tokens: jax.Array, lengths, q_lens, *, page_table=None):
+               tokens: jax.Array, lengths, q_lens, *, page_table=None,
+               all_logits: bool = False):
     """Advance every row by a per-row token count in ONE dispatch.
 
     tokens (B, C); ``lengths`` (B,) = valid cache tokens BEFORE this step;
     ``q_lens`` (B,) = live tokens per row this tick (0 = idle slot, 1 =
     decoding row, up to C = mid-prefill row, left-aligned in its chunk).
-    Returns (logits (B, V) of each row's last live token, new cache).
-    ``page_table`` (B, pages) routes paged-KV placement (None = the linear
-    default table of a default-sized pool).
+    Returns (logits (B, V) of each row's last live token, new cache) — or,
+    with ``all_logits=True``, logits (B, C, V) for EVERY chunk position
+    (the speculative-decoding verify surface: position j scores the token
+    after ``tokens[b, j]``, so a K-token draft is accepted/rejected from
+    this one dispatch).  ``page_table`` (B, pages) routes paged-KV
+    placement (None = the linear default table of a default-sized pool).
 
     Transformer families run the fused chunk-attention path (one KV stream
     for the whole mixed batch); recurrent/stateful families scan the chunk
@@ -314,12 +346,13 @@ def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
             return jnp.where(active.reshape(shape), n, old)
 
         new = jax.tree.map(sel, new, cache, cache_slot_axes(cfg))
-        return jnp.where(active[:, None], logits,
-                         jnp.zeros_like(logits)), new
+        out = jnp.where(active[:, None], logits, jnp.zeros_like(logits))
+        return (out[:, None] if all_logits else out), new
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.mixed_step(cfg, params, cache, tokens, lengths,
-                                      q_lens, page_table=page_table)
+                                      q_lens, page_table=page_table,
+                                      all_logits=all_logits)
     if cfg.family in ("ssm", "hybrid", "audio"):
         return _mixed_step_scan(cfg, params, cache, tokens, lengths, q_lens,
-                                page_table=page_table)
+                                page_table=page_table, all_logits=all_logits)
     raise ValueError(f"unknown family {cfg.family!r}")

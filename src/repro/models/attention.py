@@ -80,6 +80,20 @@ def attn_apply(cfg, p: Params, x: jax.Array, positions, *,
 # allocates/frees blocks) and rides into each dispatch as a plain operand —
 # logical position ``p`` of slot ``b`` lives at
 # ``pool[page_table[b, p // bs], :, p % bs]``.
+#
+# Rewind contract (speculative rollback): shrinking a row's ``lengths[b]``
+# is ALWAYS safe — every read masks by length, so stale K/V past the new
+# length (rejected draft tokens) is invisible and later writes overwrite it
+# in place.  Blocks wholly past ``ceil(new_len / bs)`` may be returned to
+# the pool, provided their page-table entries are re-pointed at the null
+# block FIRST (a freed block must never stay reachable through a stale
+# table row); the partially-used tail block must stay leased.
+
+def paged_blocks_for(length: int, block_size: int) -> int:
+    """Blocks needed to cover ``length`` logical tokens (ceil division) —
+    the one formula the engine's lease/reserve/rewind accounting shares."""
+    return -(-length // block_size)
+
 
 def paged_geometry(cfg, max_len: int) -> tuple[int, int]:
     """(block_size, pages_per_slot) for a paged cache addressing ``max_len``

@@ -270,7 +270,8 @@ def _prefill_chunked(cfg: ModelConfig, params: Params, tokens: jax.Array,
 
 
 def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
-               tokens: jax.Array, lengths, q_lens, *, page_table=None):
+               tokens: jax.Array, lengths, q_lens, *, page_table=None,
+               all_logits: bool = False):
     """Mixed prefill/decode step (one dispatch for the whole tick).
 
     tokens (B, C); ``lengths`` (B,) = valid cache tokens BEFORE this step;
@@ -280,6 +281,13 @@ def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
     (no left-pad bucket positions).  Returns (logits (B, V) of each row's
     LAST live token, new cache).  ``page_table`` (B, pages) routes paged
     K/V placement (None = the linear default table).
+
+    ``all_logits=True`` unembeds EVERY chunk position instead of just the
+    last live one, returning (B, C, V) — the draft-verify surface: a
+    speculating row's K+1 positions are scored in this one dispatch, so
+    acceptance needs zero extra device round-trips.  Position j's row is
+    the model's next-token distribution AFTER consuming ``tokens[b, j]``
+    (positions past ``q_lens[b]-1`` are padding garbage; callers mask).
     """
     b, c = tokens.shape
     x = embed_tokens(cfg, params, tokens)
@@ -303,6 +311,10 @@ def mixed_step(cfg: ModelConfig, params: Params, cache: Params,
         return x2 + f, new_cache
 
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    if all_logits:
+        # verify surface: every chunk position reaches the LM head
+        x = layers.apply_norm(cfg, params["ln_f"], x)
+        return unembed(cfg, params, x), new_cache
     # only each row's last live position reaches the LM head (C-fold cheaper
     # than unembedding the full chunk; mid-prefill rows need just this one)
     idx = jnp.clip(q_lens - 1, 0, c - 1)

@@ -46,6 +46,33 @@ dispatch instead:
   executable), the XLA analogue of the paper's per-token-length instruction
   streams with a MAX-token address space.
 
+* **Speculative decoding (``spec_k > 0``).**  Decode is bandwidth-bound:
+  every tick streams the whole weight set to advance each row by one token.
+  A model-free prompt-lookup drafter (``serving/draft.py``) proposes up to
+  K continuation tokens per decode row from the row's own token history;
+  the engine packs ``[last_token, d_1..d_K]`` as a ``q_lens[b] = K+1``
+  chunk into the SAME ``("mixed", W)`` dispatch (verify rows co-scheduled
+  with decode rows and mid-prefill chunks under one token budget — zero
+  new executable shapes), and ``mixed_step(all_logits=True)`` returns
+  every position's greedy token so acceptance — the longest draft prefix
+  agreeing with the model's own greedy choices — costs zero extra device
+  round-trips.  Accepted tokens emit ``a + 1`` per dispatch (the ``+1`` is
+  the model's token at the first disagreement, so every verify tick
+  emits at least what plain decode would); the rejected tail is rolled
+  back host-side by ``_rewind_slot`` — ``lengths[b]`` shrinks (stale K/V
+  past it hides behind true-length masking) and, under paging, wholly
+  dead tail blocks are re-nulled in the table and returned to the free
+  list.  Greedy acceptance is LOSSLESS: outputs are token-for-token the
+  ``reference_decode`` oracle's, speculation only changes how many
+  dispatches they take.  Families without a rewindable sequence dimension
+  (ssm/hybrid recurrent state) fail ``api.supports_speculation`` and fall
+  back to plain decode; a ``sample`` hook disables speculation for the
+  call (acceptance is defined against greedy).  A verify row that fully
+  rejects still costs a W-wide tick, so drafting is ADAPTIVE: a slot whose
+  drafts keep missing backs off exponentially (skipping drafting for 1, 2,
+  4, ... up to ``_DRAFT_BACKOFF_MAX`` ticks) and any accepted token resets
+  it — cold rows decode plainly, repetitive rows speculate at full depth.
+
 * **Paged KV (``cfg.kv_layout == "paged"``).**  KV leaves become ONE shared
   block pool; each slot addresses it through a row of the HOST-side page
   table, which rides into every dispatch as a plain operand (the dispatch
@@ -122,6 +149,32 @@ def _mixed_executable_paged(cfg: ModelConfig):
     return jax.jit(fn, donate_argnums=(1,))
 
 
+# adaptive-speculation cap: a slot whose drafts keep fully rejecting sits
+# out 1, 2, 4, ... up to this many ticks before drafting again
+_DRAFT_BACKOFF_MAX = 8
+
+
+def _mixed_executable_spec(cfg: ModelConfig, paged: bool):
+    """Verify-capable mixed tick: ``all_logits=True`` scores every chunk
+    position, the per-position greedy tokens (B, C) come back for host-side
+    draft acceptance, and the last-live-position logits keep the ``sample``
+    hook's contract.  A speculating engine uses this variant for ALL its
+    mixed ticks, so keys stay exactly ``("mixed", W)`` — the price is
+    unembedding W positions instead of 1 on chunked-prefill ticks, which is
+    what buys verify ticks their K-fold weight-stream amortization."""
+    def fn(p, c, tokens, lengths, q_lens, page_table=None):
+        kw = {"page_table": page_table} if paged else {}
+        logits, new_c = api.mixed_step(cfg, p, c, tokens, lengths, q_lens,
+                                       all_logits=True, **kw)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B, C)
+        idx = jnp.clip(q_lens - 1, 0, tokens.shape[1] - 1)
+        next_tok = jnp.take_along_axis(greedy, idx[:, None], axis=1)[:, 0]
+        last_logits = jnp.take_along_axis(
+            logits, idx[:, None, None], axis=1)[:, 0]
+        return next_tok, last_logits, new_c, greedy
+    return jax.jit(fn, donate_argnums=(1,))
+
+
 def _decode_executable(cfg: ModelConfig):
     def fn(p, c, tokens, lengths):
         logits, new_c = api.decode_step(cfg, p, c, tokens, lengths)
@@ -163,9 +216,12 @@ class Engine:
                  chunk_size: int = 64,
                  prefill_token_budget: int | None = None,
                  prefill_policy: str = "mixed",
+                 spec_k: int = 0, drafter: Any = "plookup",
                  compile_cache: CompileCache | None = None):
         if prefill_policy not in ("mixed", "stall"):
             raise ValueError(f"unknown prefill_policy {prefill_policy!r}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -174,16 +230,50 @@ class Engine:
         # >= 2 so a mixed tick never takes mixed_step's C == 1 decode
         # delegation (that path assumes every row advances by one token)
         self.chunk_size = max(2, min(chunk_size, max_len))
-        # chunk widths are bucketed so executables stay bounded: a tick's
-        # dispatch width W is the smallest bucket covering its largest chunk
-        self.chunk_buckets = TokenBuckets(
-            max_tokens=self.chunk_size,
-            min_bucket=min(16, self.chunk_size))
         self.prefill_token_budget = prefill_token_budget
         self.prefill_policy = prefill_policy
+        # speculative decoding: drafts ride the mixed dispatch as K+1-token
+        # chunks, so K is capped by the chunk width (and one slot of cache
+        # room for the mandatory real token).  Families without a rewindable
+        # sequence dimension cleanly fall back to plain decode (spec_k -> 0;
+        # the request is recorded so callers can see the gate fired).
+        self.spec_requested = spec_k
+        self.spec_supported = api.supports_speculation(cfg)
+        self.spec_k = (min(spec_k, self.chunk_size - 1)
+                       if spec_k and self.spec_supported else 0)
+        # chunk widths are bucketed so executables stay bounded: a tick's
+        # dispatch width W is the smallest bucket covering its largest chunk.
+        # A speculating engine keeps FINER buckets: verify ticks are only
+        # K+1 wide, and padding a 3-wide verify tick to the full chunk width
+        # costs more than the dispatch it saves — same ("mixed", W) key
+        # family either way, and compile_budget counts all_buckets().
+        self.chunk_buckets = TokenBuckets(
+            max_tokens=self.chunk_size,
+            min_bucket=min(4 if self.spec_k else 16, self.chunk_size))
+        if self.spec_k:
+            from repro.serving.draft import make_drafter
+            self.drafter = (make_drafter(drafter)
+                            if isinstance(drafter, str) else drafter)
+        else:
+            self.drafter = None
+        self.spec_ticks = 0        # dispatches carrying >= 1 verify row
+        self.spec_rows = 0         # verify rows dispatched
+        self.spec_drafted = 0      # draft tokens scored
+        self.spec_accepted = 0     # draft tokens accepted
+        self.spec_rewinds = 0      # partial/full rejections rolled back
+        # adaptive speculation: per-slot exponential backoff after fully
+        # rejected drafts (a miss still costs a W-wide verify tick)
+        self._draft_wait = [0] * batch_size      # ticks left to sit out
+        self._draft_penalty = [0] * batch_size   # current backoff length
         # a shared compile cache must come from an engine with the same
-        # (cfg, max_len, batch, chunk_size): executables bake these in
-        self.cache_compiles = compile_cache or CompileCache()
+        # (cfg, max_len, batch, chunk_size, spec on/off): executables bake
+        # these in — a speculating engine's mixed executables return the
+        # per-position greedy tokens, a plain engine's do not.  (`is not
+        # None`, not `or`: an EMPTY CompileCache is falsy via __len__, and
+        # silently replacing a caller's fresh cache means every engine
+        # recompiles privately and the shared cache never warms.)
+        self.cache_compiles = (compile_cache if compile_cache is not None
+                               else CompileCache())
         self._queue: "collections.deque[Request]" = collections.deque()
         # the resident slot cache (pure-KV slots are reset lazily — stale
         # rows hide behind true-length masking; stateful families are reset
@@ -252,6 +342,8 @@ class Engine:
     # -- executables (all memoized: misses bounded by compile_budget) --------
 
     def _build_mixed(self):
+        if self.spec_k:
+            return _mixed_executable_spec(self.cfg, self.paged)
         return (_mixed_executable_paged(self.cfg) if self.paged
                 else _mixed_executable(self.cfg))
 
@@ -332,7 +424,35 @@ class Engine:
             self._slot_blocks[idx] = []
             self._slot_reserve[idx] = 0
             self._page_table[idx, :] = self._null_block
+        if self.drafter is not None:
+            self.drafter.reset(idx)
         self._slots[idx] = _Slot()
+
+    def _rewind_slot(self, idx: int, new_len: int) -> None:
+        """Rollback primitive: shrink slot ``idx``'s valid length to
+        ``new_len`` (rejected speculative tokens).  Host-side only — stale
+        K/V past ``new_len`` hides behind true-length masking and the next
+        writes land over it.  Paged: tail blocks wholly past the new length
+        are re-nulled in the page table and returned to the free list, and
+        the blocks go BACK into the slot's worst-case reservation (it may
+        legitimately lease them again), so ``sum(reserve) <= free`` and
+        free+leased accounting stay invariant."""
+        slot = self._slots[idx]
+        if new_len > self.max_len:
+            raise ValueError(f"rewind to {new_len} exceeds max_len")
+        slot.length = new_len
+        if self.paged:
+            from repro.models.attention import paged_blocks_for
+            keep = paged_blocks_for(new_len, self.block_size)
+            owned = self._slot_blocks[idx]
+            while len(owned) > keep:
+                blk = owned.pop()
+                self._page_table[idx, len(owned)] = self._null_block
+                if blk in self._free_blocks:
+                    raise RuntimeError(
+                        f"double free of KV block {blk} (rewind slot {idx})")
+                self._free_blocks.append(blk)
+                self._slot_reserve[idx] += 1
 
     def _admit(self, req: Request, idx: int) -> None:
         """Lease slot ``idx`` to ``req``.  No prefill dispatch happens here:
@@ -355,6 +475,49 @@ class Engine:
                                              self._build_insert)
             self.cache = insert(self.cache, row, np.int32(idx))
         self._slots[idx] = _Slot(req=req)
+        self._draft_wait[idx] = self._draft_penalty[idx] = 0
+        if self.drafter is not None:
+            # seed the drafter with the full prompt (prompt-lookup proper):
+            # drafts may copy prompt spans before the prompt finishes
+            # streaming through the cache — acceptance keeps it lossless
+            self.drafter.reset(idx)
+            self.drafter.observe(idx, req.prompt)
+
+    def _schedule_drafts(self, chunks: list[int], decoding: list[int],
+                         sample) -> dict[int, list[int]]:
+        """Pick this tick's verify rows: up to ``spec_k`` draft tokens per
+        decode row from the drafter, each capped by (1) cache room past the
+        row's mandatory real token, (2) the request's remaining token need
+        minus one — which also keeps the tick's writes inside the paged
+        worst-case reservation (``len(prompt) + max_new_tokens`` total) —
+        and (3) the shared prefill token budget: chunks are scheduled
+        first, verify tokens consume what remains.  A ``sample`` hook
+        disables drafting for the tick (acceptance is defined against the
+        model's greedy tokens)."""
+        if not self.spec_k or sample is not None:
+            return {}
+        left = None
+        if self.prefill_token_budget is not None:
+            left = max(self.prefill_token_budget - sum(chunks), 0)
+        drafts: dict[int, list[int]] = {}
+        for i in decoding:
+            if self._draft_wait[i] > 0:          # backing off after misses
+                self._draft_wait[i] -= 1
+                continue
+            s = self._slots[i]
+            k = min(self.spec_k,
+                    self.max_len - s.length - 1,
+                    s.req.max_new_tokens - len(s.req.output) - 1)
+            if left is not None:
+                k = min(k, left)
+            if k <= 0:
+                continue
+            d = self.drafter.draft(i, k)
+            if d:
+                drafts[i] = d
+                if left is not None:
+                    left -= len(d)
+        return drafts
 
     def _schedule_chunks(self) -> list[int]:
         """Pick this tick's per-slot prompt-chunk sizes (Sarathi-style).
@@ -396,6 +559,8 @@ class Engine:
         req.output.append(token)
         req.token_times.append(now)
         slot.last_token = token
+        if self.drafter is not None:
+            self.drafter.observe(idx, (token,))
         if (len(req.output) >= req.max_new_tokens or
                 slot.length >= self.max_len or  # no cache room to decode into
                 (self.eos_id is not None and token == self.eos_id)):
@@ -432,19 +597,26 @@ class Engine:
             stall = (self.prefill_policy == "stall" and any(chunks))
             decoding = [i for i in live
                         if not self._slots[i].prefilling and not stall]
+            drafts = self._schedule_drafts(chunks, decoding, sample)
             if self.paged:
                 # on-demand leases for every row advancing this tick (the
-                # admission reservation guarantees these succeed)
+                # admission reservation guarantees these succeed — verify
+                # rows stay inside it via the drafts' remaining-need cap)
                 for i, s in enumerate(self._slots):
                     if chunks[i]:
                         self._lease_to(i, s.length + chunks[i])
                     elif i in decoding:
-                        self._lease_to(i, s.length + 1)
+                        self._lease_to(
+                            i, s.length + 1 + len(drafts.get(i, ())))
                 page_table = jnp.asarray(self._page_table)
 
-            if any(chunks):
-                # 2a. mixed tick: prompt chunks + decode rows, one dispatch
-                w = self.chunk_buckets.bucket(max(max(chunks), 2))
+            greedy_np = None
+            if any(chunks) or drafts:
+                # 2a. mixed tick: prompt chunks + decode + verify rows,
+                # one dispatch
+                wide = max([max(chunks), 2] +
+                           [1 + len(d) for d in drafts.values()])
+                w = self.chunk_buckets.bucket(wide)
                 tokens = np.zeros((self.batch, w), np.int32)
                 lengths = np.zeros(self.batch, np.int32)
                 q_lens = np.zeros(self.batch, np.int32)
@@ -455,15 +627,28 @@ class Engine:
                         tokens[i, :chunks[i]] = \
                             s.req.prompt[s.pos:s.pos + chunks[i]]
                     elif i in decoding:
-                        q_lens[i] = 1
+                        d = drafts.get(i, ())
+                        q_lens[i] = 1 + len(d)
                         tokens[i, 0] = s.last_token
+                        if d:
+                            tokens[i, 1:1 + len(d)] = d
                 fn = self.cache_compiles.get("mixed", w, self._build_mixed)
                 args = (jnp.asarray(tokens), jnp.asarray(lengths),
                         jnp.asarray(q_lens))
                 if self.paged:
                     args += (page_table,)
-                next_tok, logits, self.cache = fn(
-                    self.params, self.cache, *args)
+                if self.spec_k:
+                    next_tok, logits, self.cache, greedy = fn(
+                        self.params, self.cache, *args)
+                    if drafts:
+                        greedy_np = np.asarray(greedy)
+                        self.spec_ticks += 1
+                        self.spec_rows += len(drafts)
+                        self.spec_drafted += sum(
+                            len(d) for d in drafts.values())
+                else:
+                    next_tok, logits, self.cache = fn(
+                        self.params, self.cache, *args)
                 self.mixed_ticks += 1
             else:
                 # 2b. pure-decode tick: the classic executable (bit-identical
@@ -489,7 +674,8 @@ class Engine:
             self._occupancy_sum += len(live) / self.batch
             self.peak_resident_tokens = max(
                 self.peak_resident_tokens,
-                sum(self._slots[i].length + chunks[i] + (i in decoding)
+                sum(self._slots[i].length + chunks[i] + (i in decoding) +
+                    len(drafts.get(i, ()))
                     for i in live))
             next_np = np.asarray(next_tok)
             logits_np = None if sample is None else np.asarray(logits)
@@ -505,6 +691,40 @@ class Engine:
                         tok = (int(next_np[i]) if sample is None
                                else int(sample(logits_np[i])))
                         self._emit(i, tok, completed, first=True)
+                elif i in drafts:
+                    # verify row: accept the longest draft prefix agreeing
+                    # with the model's greedy tokens, emit the model's token
+                    # at each accepted position PLUS the first disagreement
+                    # (so a verify tick never emits less than plain decode),
+                    # then roll back the rejected tail
+                    d = drafts[i]
+                    g = greedy_np[i]
+                    a = 0
+                    while a < len(d) and d[a] == int(g[a]):
+                        a += 1
+                    self.spec_accepted += a
+                    if a:               # productive row: speculate freely
+                        self._draft_wait[i] = self._draft_penalty[i] = 0
+                    else:               # full miss: back off exponentially
+                        self._draft_penalty[i] = min(
+                            max(self._draft_penalty[i] * 2, 1),
+                            _DRAFT_BACKOFF_MAX)
+                        self._draft_wait[i] = self._draft_penalty[i]
+                    base = slot.length
+                    freed = False
+                    for j in range(a + 1):
+                        # emit-time length matches the sequential schedule:
+                        # token j corresponds to cache length base + 1 + j,
+                        # so the max_len/eos/max_new stop rules fire at
+                        # exactly the oracle's token
+                        slot.length = base + 1 + j
+                        self._emit(i, int(g[j]), completed, first=False)
+                        if self._slots[i].req is None:
+                            freed = True   # finished: _free_slot did cleanup
+                            break
+                    if not freed and a < len(d):
+                        self.spec_rewinds += 1
+                        self._rewind_slot(i, base + 1 + a)
                 elif i in decoding:
                     slot.length += 1
                     tok = (int(next_np[i]) if sample is None
@@ -518,6 +738,27 @@ class Engine:
     def slot_occupancy(self) -> float:
         """Mean fraction of slots live per tick (1.0 = saturated)."""
         return self._occupancy_sum / self.steps if self.steps else 0.0
+
+    def spec_stats(self) -> dict[str, float]:
+        """Speculation counters: how much the verify ticks amortized.
+
+        ``accepted_per_dispatch`` is the headline — extra tokens a verify
+        dispatch yielded beyond the one plain decode would have (so
+        verify-row tokens/dispatch is ``1 + accepted_per_dispatch``)."""
+        return {
+            "spec_k": self.spec_k,
+            "spec_requested": self.spec_requested,
+            "spec_supported": self.spec_supported,
+            "spec_ticks": self.spec_ticks,
+            "verify_rows": self.spec_rows,
+            "draft_tokens": self.spec_drafted,
+            "accepted_tokens": self.spec_accepted,
+            "rewinds": self.spec_rewinds,
+            "acceptance_rate": (self.spec_accepted /
+                                max(self.spec_drafted, 1)),
+            "accepted_per_dispatch": (self.spec_accepted /
+                                      max(self.spec_ticks, 1)),
+        }
 
     @staticmethod
     def summarize(reqs: list[Request]) -> dict[str, float]:

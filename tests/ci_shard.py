@@ -1,13 +1,18 @@
 """Deterministic two-way shard split of the test suite for CI.
 
-The suite is past 300 tests and the CI runner is 2-core, so the workflow
+The suite is past 350 tests and the CI runner is 2-core, so the workflow
 runs two parallel shard jobs, each with the tier-1 ``-x -q`` semantics.
 Shards are whole FILES (pytest's per-file fixtures/caches stay warm) packed
-greedily by a static runtime weight; unknown new test files pick up a
-default weight, so adding a file never drops it from CI.
+greedily by COLLECTED TEST COUNT (``pytest --collect-only -q``; the
+hypothesis-gated files count their test functions); unknown new test files
+pick up a default weight, so adding a file never drops it from CI — and
+``--assert-partition`` makes that a checked invariant: every
+``tests/test_*.py`` lands in exactly one shard.
 
-Usage:  python tests/ci_shard.py <1|2>     -> space-separated file list
-        python tests/ci_shard.py --check   -> print both shards
+Usage:  python tests/ci_shard.py <1|2>               -> shard's file list
+        python tests/ci_shard.py --check             -> print both shards
+        python tests/ci_shard.py --assert-partition  -> exit 1 on any file
+                                                        missing/duplicated
 """
 
 from __future__ import annotations
@@ -15,32 +20,37 @@ from __future__ import annotations
 import pathlib
 import sys
 
-# coarse relative runtimes (measured on the 2-core CI runner); the exact
-# numbers only matter for balance, not correctness
+# collected-test counts (refresh with: pytest --collect-only -q tests/);
+# the exact numbers only matter for balance, not correctness
 WEIGHTS = {
-    "test_archs.py": 10,
-    "test_decode_kernel.py": 6,
-    "test_distribution.py": 8,
-    "test_ffn_fused.py": 6,
-    "test_kernels.py": 4,
-    "test_mixed.py": 12,
-    "test_paged_engine.py": 7,
-    "test_paged_fuzz.py": 3,
-    "test_quant.py": 2,
-    "test_serving.py": 5,
-    "test_sparsity.py": 2,
-    "test_substrate.py": 3,
+    "test_archs.py": 45,
+    "test_decode_kernel.py": 79,
+    "test_distribution.py": 12,
+    "test_ffn_fused.py": 42,
+    "test_kernels.py": 45,
+    "test_mixed.py": 27,
+    "test_paged_engine.py": 11,
+    "test_paged_fuzz.py": 14,
+    "test_quant.py": 10,
+    "test_serving.py": 12,
+    "test_sparsity.py": 14,
+    "test_spec.py": 26,
+    "test_substrate.py": 24,
 }
-DEFAULT_WEIGHT = 4
+DEFAULT_WEIGHT = 15
 N_SHARDS = 2
 
 
-def shards() -> list[list[str]]:
+def _test_files() -> list[str]:
     tests_dir = pathlib.Path(__file__).parent
-    files = sorted(p.name for p in tests_dir.glob("test_*.py"))
+    return sorted(p.name for p in tests_dir.glob("test_*.py"))
+
+
+def shards() -> list[list[str]]:
     # greedy longest-processing-time packing: deterministic for a given
     # file set (sorted by weight desc, then name; ties to the lighter shard)
-    order = sorted(files, key=lambda f: (-WEIGHTS.get(f, DEFAULT_WEIGHT), f))
+    order = sorted(_test_files(),
+                   key=lambda f: (-WEIGHTS.get(f, DEFAULT_WEIGHT), f))
     buckets: list[list[str]] = [[] for _ in range(N_SHARDS)]
     loads = [0] * N_SHARDS
     for f in order:
@@ -50,12 +60,30 @@ def shards() -> list[list[str]]:
     return [sorted(b) for b in buckets]
 
 
+def assert_partition() -> None:
+    """Every tests/test_*.py in EXACTLY one shard — catches a future edit
+    that hand-curates shard lists and silently drops a file from CI."""
+    files = _test_files()
+    placed = [f for part in shards() for f in part]
+    dupes = sorted({f for f in placed if placed.count(f) > 1})
+    missing = sorted(set(files) - set(placed))
+    foreign = sorted(set(placed) - set(files))
+    if dupes or missing or foreign:
+        raise SystemExit(f"shard partition broken: duplicated={dupes} "
+                         f"missing={missing} foreign={foreign}")
+    print(f"OK: {len(files)} test files partitioned into {N_SHARDS} shards")
+
+
 def main() -> None:
     arg = sys.argv[1] if len(sys.argv) > 1 else "--check"
+    if arg == "--assert-partition":
+        assert_partition()
+        return
     parts = shards()
     if arg == "--check":
         for i, part in enumerate(parts, 1):
-            print(f"shard {i}: {' '.join(part)}")
+            load = sum(WEIGHTS.get(f, DEFAULT_WEIGHT) for f in part)
+            print(f"shard {i} ({load} tests): {' '.join(part)}")
         return
     idx = int(arg) - 1
     if not 0 <= idx < N_SHARDS:

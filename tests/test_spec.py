@@ -1,0 +1,395 @@
+"""Speculative-decoding tests: prompt-lookup drafter unit behavior, engine
+speculation vs the batch-1 oracle for every supporting family (incl. int8-KV
+and the paged layout), plain-decode fallback for recurrent families, the
+``_rewind_slot`` rollback primitive's free-list invariants, and compile-key
+boundedness (speculation adds NO new executable shapes).
+
+The core property — after any schedule of partial accepts and rewinds the
+engine's token stream is BITWISE equal to a never-speculated run and the
+block pool comes back whole — runs here as deterministic parametrized cases;
+the hypothesis harness widens the draw space in CI.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.compiler import CompileCache
+from repro.models import api
+from repro.serving.draft import PromptLookupDrafter, make_drafter
+from repro.serving.engine import Engine, Request, reference_decode
+
+# shared so the oracle / engines compile once per (family, layout, quant) key
+_REF_CC = {}
+_ENGINE_CC = {}
+
+
+def _oracle_cc(key):
+    return _REF_CC.setdefault(key, CompileCache())
+
+
+def _engine_cc(key):
+    # NB spec and non-spec engines bind DIFFERENT executables under the same
+    # ("mixed", W) keys — the key must carry spec on/off (and layout/quant)
+    return _ENGINE_CC.setdefault(key, CompileCache())
+
+
+def _rep_reqs(cfg, n, rng, *, max_new=(4, 12), rid0=0):
+    """Repetition-heavy requests: prompts are a short pattern tiled, so the
+    prompt-lookup drafter fires from the first decode tick — and greedy
+    decode of a deterministic model run long enough falls into cycles it
+    then predicts from emitted history."""
+    out = []
+    for i in range(n):
+        frames = None
+        if cfg.family == "audio":
+            frames = rng.normal(
+                size=(cfg.encoder_frames, cfg.d_model)).astype(np.float32)
+        pat = rng.integers(0, cfg.vocab_size, int(rng.integers(2, 6)))
+        out.append(Request(
+            rid=rid0 + i, prompt=np.tile(pat, 3).astype(np.int32),
+            max_new_tokens=int(rng.integers(*max_new)), frames=frames))
+    return out
+
+
+def _assert_oracle_parity(cfg, params, done, max_len, key):
+    for r in done:
+        ref = reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                               max_len=max_len, frames=r.frames,
+                               compile_cache=_oracle_cc(key))
+        assert r.output == ref, \
+            f"req {r.rid} diverged from the batch-1 oracle under speculation"
+
+
+def _assert_pool_intact(engine):
+    stats = engine.pool_stats()
+    assert stats["leased"] == 0 and stats["reserved_outstanding"] == 0
+    free = engine._free_blocks
+    assert len(free) == engine.pool_blocks, "free list leaked blocks"
+    assert sorted(free) == list(range(engine.pool_blocks)), \
+        "free list holds duplicate or foreign block ids"
+
+
+def _assert_bounded_compiles(engine):
+    assert engine.cache_compiles.misses <= engine.compile_budget
+    names = {name for name, _ in engine.cache_compiles.keys()}
+    assert names <= {"mixed", "decode", "insert", "admit"}, \
+        f"speculation introduced new executable kinds: {names}"
+
+
+# ---------------------------------------------------------------------------
+# drafter unit behavior
+# ---------------------------------------------------------------------------
+
+class TestPromptLookupDrafter:
+    def test_cycle_match(self):
+        """``a b a b`` must match itself — the suffix's own occurrence is
+        skipped in favor of the one before it."""
+        d = PromptLookupDrafter(ngram_max=2)
+        d.observe(0, [1, 2, 1, 2])
+        assert d.draft(0, 2) == [1, 2]
+
+    def test_prompt_continuation(self):
+        d = PromptLookupDrafter(ngram_max=2)
+        d.observe(0, [5, 6, 7, 8, 5, 6])
+        # suffix (5, 6) last occurred ending at 2 -> copy what followed it
+        assert d.draft(0, 3) == [7, 8, 5]
+
+    def test_longest_ngram_wins(self):
+        d = PromptLookupDrafter(ngram_max=2)
+        d.observe(0, [2, 5, 1, 2, 8, 2, 9, 1, 2])
+        # bigram (1, 2) ends at 4 -> [8, 2, 9]; the unigram (2) alone would
+        # have matched its own later occurrence at 6 -> [9, 1, 2]
+        assert d.draft(0, 3) == [8, 2, 9]
+
+    def test_periodic_extension(self):
+        """A match overlapping the current position defines a cycle; the
+        draft continues it past the end of history instead of truncating —
+        greedy loops (constant runs, short cycles) are the dominant
+        accept source."""
+        d = PromptLookupDrafter(ngram_max=3)
+        d.observe(0, [4, 4, 4, 4])
+        assert d.draft(0, 5) == [4, 4, 4, 4, 4]      # period 1
+        d.observe(1, [7, 1, 5, 1, 5, 1, 5])
+        assert d.draft(1, 5) == [1, 5, 1, 5, 1]      # period 2
+
+    def test_no_match_returns_empty(self):
+        d = PromptLookupDrafter()
+        d.observe(0, [1, 2, 3, 4, 5])
+        assert d.draft(0, 4) == []
+        assert d.draft(0, 0) == []
+        assert d.draft(7, 4) == []           # never-observed slot
+
+    def test_slots_isolated_and_reset(self):
+        d = PromptLookupDrafter(ngram_max=2)
+        d.observe(0, [1, 2, 1, 2])
+        d.observe(1, [9, 9, 9])
+        assert d.draft(0, 2) == [1, 2]
+        assert d.draft(1, 2) == [9, 9]       # period-1 extension
+        d.reset(0)
+        assert d.draft(0, 2) == [] and d.history_len(0) == 0
+        assert d.draft(1, 2) == [9, 9]       # slot 1 untouched
+
+    def test_incremental_observe_equals_bulk(self):
+        bulk, inc = PromptLookupDrafter(), PromptLookupDrafter()
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, 7, 40).tolist()
+        bulk.observe(0, toks)
+        for t in toks:
+            inc.observe(0, [t])
+        assert bulk.draft(0, 5) == inc.draft(0, 5)
+
+    def test_registry(self):
+        assert isinstance(make_drafter("plookup"), PromptLookupDrafter)
+        with pytest.raises(ValueError, match="unknown drafter"):
+            make_drafter("oracle")
+        with pytest.raises(ValueError, match="ngram_min"):
+            PromptLookupDrafter(ngram_max=0)
+
+
+# ---------------------------------------------------------------------------
+# engine level: speculation is lossless for every supporting family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,overrides", [
+    ("qwen-7b", {}),
+    ("qwen-7b", {"kv_quant": "int8"}),
+    ("qwen-7b", {"kv_layout": "paged", "kv_block_size": 8}),
+    ("qwen-7b", {"kv_quant": "int8", "kv_layout": "paged",
+                 "kv_block_size": 8}),
+    ("whisper-small", {}),
+], ids=["dense", "int8kv", "paged", "paged-int8", "audio"])
+def test_spec_engine_matches_oracle(name, overrides):
+    """Engine with speculation ON emits token-for-token what the sequential
+    batch-1 oracle emits — drafts only change the dispatch count.  Compile
+    misses stay within the plain engine's budget (no new shapes)."""
+    cfg = get_smoke_config(name, **overrides)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    engine = Engine(cfg, params, batch_size=2, max_len=48, chunk_size=8,
+                    spec_k=4)
+    reqs = _rep_reqs(cfg, 5, rng)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert len(done) == 5 and all(r.done for r in done)
+    assert engine.dispatches == engine.steps     # still one per tick
+    assert engine.spec_drafted > 0, "workload never produced a verify row"
+    assert engine.spec_accepted <= engine.spec_drafted
+    _assert_bounded_compiles(engine)
+    key = (name, tuple(sorted(overrides.items())))
+    _assert_oracle_parity(cfg, params, done, 48, key)
+    if engine.paged:
+        _assert_pool_intact(engine)
+
+
+@pytest.mark.parametrize("arch", ["xlstm-1.3b", "zamba2-7b"])
+def test_recurrent_families_fall_back(arch):
+    """ssm/hybrid rows carry irreversible O(1) recurrent state — no rewind,
+    so speculation degrades to plain decode (and says so in the stats)
+    instead of corrupting outputs."""
+    cfg = get_smoke_config(arch)
+    assert not api.supports_speculation(cfg)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    engine = Engine(cfg, params, batch_size=2, max_len=32, chunk_size=8,
+                    spec_k=4)
+    assert engine.spec_k == 0 and engine.drafter is None
+    stats = engine.spec_stats()
+    assert stats["spec_requested"] == 4 and not stats["spec_supported"]
+    reqs = _rep_reqs(cfg, 3, rng)
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert engine.spec_ticks == 0
+    _assert_oracle_parity(cfg, params, done, 32, arch)
+
+
+def test_sample_hook_disables_drafting():
+    """Acceptance is defined against greedy argmax, so a sampling hook must
+    suppress verify rows for the tick — outputs follow the hook, not K."""
+    cfg = get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+
+    def second_best(logits):            # maps one logits row (V,) -> token
+        return int(np.argsort(np.asarray(logits))[-2])
+
+    outs = []
+    for spec_k in (0, 4):
+        engine = Engine(cfg, params, batch_size=2, max_len=32, chunk_size=8,
+                        spec_k=spec_k)
+        rng = np.random.default_rng(4)
+        for r in _rep_reqs(cfg, 3, rng):
+            engine.submit(r)
+        done = engine.run(sample=second_best)
+        assert engine.spec_ticks == 0 and engine.spec_drafted == 0
+        outs.append({r.rid: r.output for r in done})
+    assert outs[0] == outs[1]
+
+
+class _GarbageDrafter:
+    """Adversarial drafter: always proposes in-vocab but (almost surely)
+    wrong continuations, so nearly every verify row degenerates to one real
+    token plus a rewind — acceptance must keep outputs lossless anyway."""
+
+    def __init__(self, vocab: int):
+        self.vocab = vocab
+        self._n = 0
+
+    def reset(self, slot):
+        pass
+
+    def observe(self, slot, tokens):
+        pass
+
+    def draft(self, slot, k):
+        self._n += 1
+        return [(self._n * 7 + j * 3 + 1) % self.vocab for j in range(k)]
+
+
+def test_garbage_drafts_cost_throughput_not_correctness():
+    """Draft quality is a THROUGHPUT knob only: a pure-garbage drafter
+    forces rewinds on nearly every verify tick and the paged pool still
+    comes back whole with oracle-exact outputs."""
+    cfg = get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
+                           kv_layout="paged", kv_block_size=8)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    engine = Engine(cfg, params, batch_size=3, max_len=48, chunk_size=8,
+                    spec_k=4, drafter=_GarbageDrafter(cfg.vocab_size))
+    reqs = _rep_reqs(cfg, 6, rng, max_new=(6, 12))
+    for r in reqs:
+        engine.submit(r)
+    done = engine.run()
+    assert engine.spec_rewinds > 0, "garbage drafts must trigger rollback"
+    _assert_pool_intact(engine)
+    _assert_bounded_compiles(engine)
+    _assert_oracle_parity(cfg, params, done, 48, "garbage")
+
+
+# ---------------------------------------------------------------------------
+# rewind primitive: allocator unit guarantees
+# ---------------------------------------------------------------------------
+
+def _paged_engine(**over):
+    cfg = get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
+                           kv_layout="paged", kv_block_size=8, **over)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg, params, batch_size=3, max_len=32, chunk_size=4)
+
+
+def test_rewind_returns_whole_tail_blocks():
+    engine = _paged_engine()
+    engine._slots[0].req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
+    engine._slot_reserve[0] = 3
+    engine._lease_to(0, 17)                  # 3 blocks at block_size=8
+    engine._slots[0].length = 17
+    freed_order = list(engine._slot_blocks[0])
+
+    engine._rewind_slot(0, 9)                # ceil(9/8) = 2 blocks survive
+    assert engine._slots[0].length == 9
+    assert engine._slot_blocks[0] == freed_order[:2]
+    assert engine._page_table[0, 2] == engine._null_block
+    assert freed_order[2] in engine._free_blocks
+    # leasing consumed the 3-block reservation; the freed block goes BACK
+    # into it (the slot may legitimately lease it again)
+    assert engine._slot_reserve[0] == 1
+
+    engine._rewind_slot(0, 9)                # same length: no-op
+    assert engine._slot_blocks[0] == freed_order[:2]
+
+    engine._rewind_slot(0, 8)                # exact block boundary: 1 block
+    assert engine._slot_blocks[0] == freed_order[:1]
+    assert engine._slot_reserve[0] == 2
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        engine._rewind_slot(0, engine.max_len + 1)
+
+    engine._free_slot(0)
+    _assert_pool_intact(engine)
+
+
+def test_rewind_double_free_detected():
+    engine = _paged_engine()
+    engine._slots[0].req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
+    engine._slot_reserve[0] = 2
+    engine._lease_to(0, 16)                  # 2 blocks
+    engine._slot_blocks[0][-1] = engine._free_blocks[0]   # corrupt: alias
+    with pytest.raises(RuntimeError, match="double free"):
+        engine._rewind_slot(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# the rollback property: spec run == never-speculated run, leak-free
+# ---------------------------------------------------------------------------
+
+def _check_spec_property(*, seed, spec_k, kv_quant, ngram_max, paged=True):
+    """For a random repetition-heavy workload: the speculating engine's
+    token streams are BITWISE equal to a never-speculated engine's, the
+    pool free list comes back whole (no leak, no double free), and compile
+    misses stay within the plain budget."""
+    over = ({"kv_layout": "paged", "kv_block_size": 8} if paged else {})
+    cfg = get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
+                           kv_quant=kv_quant, **over)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(k):
+        engine = Engine(
+            cfg, params, batch_size=3, max_len=48, chunk_size=8, spec_k=k,
+            drafter=PromptLookupDrafter(ngram_max=ngram_max),
+            compile_cache=_engine_cc((kv_quant, paged, bool(k))))
+        rng = np.random.default_rng(seed)
+        reqs = _rep_reqs(cfg, 7, rng, max_new=(4, 12))
+        for r in reqs:
+            engine.submit(r)
+        done = engine.run()
+        assert len(done) == len(reqs)
+        return engine, {r.rid: r.output for r in done}
+
+    spec_engine, spec_out = run(spec_k)
+    plain_engine, plain_out = run(0)
+    assert spec_out == plain_out, \
+        "speculation changed the token stream (must be lossless)"
+    assert spec_engine.spec_drafted > 0
+    _assert_bounded_compiles(spec_engine)
+    if paged:
+        _assert_pool_intact(spec_engine)
+        _assert_pool_intact(plain_engine)
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "int8"])
+@pytest.mark.parametrize("seed,spec_k", [(0, 4), (1, 2), (2, 3)])
+def test_spec_rollback_leakfree_bitwise(seed, spec_k, kv_quant):
+    _check_spec_property(seed=seed, spec_k=spec_k, kv_quant=kv_quant,
+                         ngram_max=3)
+
+
+def test_spec_rollback_slot_layout():
+    _check_spec_property(seed=3, spec_k=4, kv_quant="none", ngram_max=2,
+                         paged=False)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis harness (CI: hypothesis ships in requirements-dev)
+# ---------------------------------------------------------------------------
+
+try:        # guarded, NOT importorskip: the deterministic cases above must
+    from hypothesis import given, settings, strategies as st  # noqa: E402
+    _HAVE_HYPOTHESIS = True       # run even without hypothesis installed
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           spec_k=st.integers(1, 6),
+           kv_quant=st.sampled_from(["none", "int8"]),
+           ngram_max=st.sampled_from([1, 2, 3]))
+    def test_spec_rollback_property_fuzz(seed, spec_k, kv_quant, ngram_max):
+        _check_spec_property(seed=seed, spec_k=spec_k, kv_quant=kv_quant,
+                             ngram_max=ngram_max)
+else:
+    @pytest.mark.skip(reason="property fuzz needs hypothesis "
+                             "(pip install -r requirements-dev.txt)")
+    def test_spec_rollback_property_fuzz():
+        pass
