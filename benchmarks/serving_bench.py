@@ -291,6 +291,110 @@ def run_paged_capacity(cfg, params, *, max_len: int = 64,
 
 
 # ---------------------------------------------------------------------------
+# prefix-sharing mode (shared system prompt, radix cache + CoW paged KV)
+# ---------------------------------------------------------------------------
+
+def _prefix_workload(cfg, *, n_requests: int, system_len: int, max_new: int,
+                     user_lo: int = 4, user_hi: int = 13, seed: int = 5):
+    """The multi-tenant shape prefix sharing targets: every request opens
+    with the SAME system prompt and differs only in a short user turn."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(0, cfg.vocab_size, system_len)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [system,
+                         rng.integers(0, cfg.vocab_size,
+                                      int(rng.integers(user_lo, user_hi)))]
+                    ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n_requests)]
+
+
+def _prefix_trial(cfg, params, *, prefix_cache: bool, batch: int,
+                  max_len: int, workload, chunk_size: int = 8,
+                  compile_cache: CompileCache | None = None):
+    """One engine run over the shared-system-prompt workload.
+
+    ``cached_ttft_p50_ms`` is the headline: TTFT over the requests admitted
+    AFTER the first batch — the ones whose system prompt is already cached
+    when sharing is on (the cache warms as the first wave's prefills
+    finish), measured identically for the no-sharing baseline."""
+    engine = Engine(cfg, params, batch_size=batch, max_len=max_len,
+                    chunk_size=chunk_size, prefix_cache=prefix_cache,
+                    compile_cache=compile_cache)
+    reqs = [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens) for r in workload]
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    ttft = [r.first_token_at - r.submitted_at for r in reqs]
+    late = [r.first_token_at - r.submitted_at for r in reqs
+            if r.rid >= batch]
+    out = {
+        "prefix_cache": engine.prefix_sharing,
+        "completed": len(done),
+        "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+        "cached_ttft_p50_ms": float(np.percentile(late, 50) * 1e3),
+        "tokens_per_s": sum(len(r.output) for r in done) / dt,
+        "steps": engine.steps,
+        "mixed_ticks": engine.mixed_ticks,
+        "occupancy": engine.slot_occupancy,
+        "admission_stalls": engine.admission_stalls,
+        "peak_pool_blocks": engine.peak_pool_blocks,
+        "pool_blocks": engine.pool_blocks,
+        "outputs": {r.rid: [int(t) for t in r.output] for r in done},
+    }
+    if engine.prefix_sharing:
+        out["prefix"] = engine.prefix_stats()
+        st = engine.pool_stats()
+        out["shared_blocks"] = st["shared_blocks"]
+        out["cow_copies"] = st["cow_copies"]
+        out["prefix_hit_tokens"] = st["prefix_hit_tokens"]
+    return out, engine.cache_compiles
+
+
+def run_prefix_sharing(cfg, params, *, batch: int = 4, max_len: int = 96,
+                       block_size: int = 8, system_len: int = 48,
+                       n_requests: int = 16, max_new: int = 8) -> dict:
+    """Sharing ON vs OFF on the same workload at EQUAL KV HBM budget.
+
+    The pool is sized so the no-sharing engine can hold only ~2 requests'
+    worst case at once (reservation pressure): sharing admits the common
+    system prompt by page-table copy, so the same pool holds the full batch
+    concurrently — stalls collapse, slot occupancy rises, and cached-prefix
+    TTFT drops to the cost of the user-turn suffix.  Outputs are checked
+    token-identical between the two runs (sharing is exact)."""
+    import dataclasses
+    worst = -(-(system_len + 12 + max_new) // block_size)
+    pool_blocks = 2 * worst + 6          # ~2 concurrent without sharing
+    cfg_paged = dataclasses.replace(cfg, kv_layout="paged",
+                                    kv_block_size=block_size,
+                                    kv_pool_blocks=pool_blocks)
+    workload = _prefix_workload(cfg_paged, n_requests=n_requests,
+                                system_len=system_len, max_new=max_new)
+    kw = dict(batch=batch, max_len=max_len, workload=workload)
+    _, cc = _prefix_trial(cfg_paged, params, prefix_cache=True, **kw)  # warm
+    off, cc = _prefix_trial(cfg_paged, params, prefix_cache=False,
+                            compile_cache=cc, **kw)
+    on, cc = _prefix_trial(cfg_paged, params, prefix_cache=True,
+                           compile_cache=cc, **kw)
+    outputs_match = off.pop("outputs") == on.pop("outputs")
+    return {
+        "config": {"arch": cfg.name, "batch": batch, "max_len": max_len,
+                   "block_size": block_size, "system_len": system_len,
+                   "n_requests": n_requests, "pool_blocks": pool_blocks},
+        "no_sharing": off,
+        "sharing": on,
+        "outputs_match": outputs_match,
+        "cached_ttft_p50_speedup": (off["cached_ttft_p50_ms"] /
+                                    max(on["cached_ttft_p50_ms"], 1e-9)),
+        "occupancy_gain": on["occupancy"] / max(off["occupancy"], 1e-9),
+    }
+
+
+# ---------------------------------------------------------------------------
 # speculative-decoding mode (prompt-lookup drafts through the mixed dispatch)
 # ---------------------------------------------------------------------------
 
@@ -425,6 +529,14 @@ def rows() -> list[tuple[str, float, str]]:
          f"accept={k4['acceptance_rate']:.2f} "
          f"speedup={k4['speedup_vs_plain']:.2f}x "
          f"match={k4['outputs_match_baseline']}"))
+    pfx = run_prefix_sharing(cfg, params, n_requests=10)
+    out.append(
+        ("serving/prefix_cached_ttft_p50_us",
+         pfx["sharing"]["cached_ttft_p50_ms"] * 1e3,
+         f"vs_cold={pfx['cached_ttft_p50_speedup']:.2f}x "
+         f"hit_tokens={pfx['sharing']['prefix_hit_tokens']} "
+         f"cow={pfx['sharing']['cow_copies']} "
+         f"match={pfx['outputs_match']}"))
     return out
 
 
@@ -447,6 +559,9 @@ def run_smoke(path: str = "BENCH_serving.json") -> dict:
     # speculative-decoding cut: accepted tokens/dispatch and decode tok/s at
     # K in {2, 4, 8} on the repetition-heavy workload, plain decode baseline
     record["speculative"] = run_spec(cfg, params)
+    # prefix-sharing cut: shared-system-prompt workload, sharing ON vs OFF
+    # at equal KV HBM budget (cached TTFT + concurrency, outputs checked)
+    record["prefix_sharing"] = run_prefix_sharing(cfg, params)
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
     print(json.dumps(record, indent=2, sort_keys=True))
@@ -456,7 +571,7 @@ def run_smoke(path: str = "BENCH_serving.json") -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="mixed",
-                    choices=["mixed", "throughput", "spec"])
+                    choices=["mixed", "throughput", "spec", "prefix"])
     ap.add_argument("--arch", default="qwen-7b")
     ap.add_argument("--batches", default="1,2,4,8")
     ap.add_argument("--queue-depths", default="8,16")
@@ -491,6 +606,30 @@ def main() -> None:
         print(f"paged resident-token capacity: {gain:.2f}x the slot layout "
               f"at equal HBM (stalls: paged={rec['paged']['admission_stalls']}"
               f" slot={rec['slot']['admission_stalls']})")
+        return
+
+    if args.mode == "prefix":
+        rec = run_prefix_sharing(cfg, params, max_len=args.max_len)
+        c = rec["config"]
+        print(f"arch={cfg.name} system_prompt={c['system_len']} tokens, "
+              f"{c['n_requests']} requests, pool={c['pool_blocks']} blocks "
+              f"x {c['block_size']} (equal HBM both runs)")
+        print(f"{'sharing':>8} {'cached_ttft_p50':>15} {'stalls':>7} "
+              f"{'occup':>6} {'peak_blk':>8} {'steps':>6}")
+        for key in ("no_sharing", "sharing"):
+            r = rec[key]
+            print(f"{str(r['prefix_cache']):>8} "
+                  f"{r['cached_ttft_p50_ms']:>14.1f}m "
+                  f"{r['admission_stalls']:>7} {r['occupancy']:>6.2f} "
+                  f"{r['peak_pool_blocks']:>8} {r['steps']:>6}")
+        on = rec["sharing"]
+        print(f"cached-prefix TTFT p50 {rec['cached_ttft_p50_speedup']:.2f}x "
+              f"faster, occupancy {rec['occupancy_gain']:.2f}x at equal pool "
+              f"(outputs_match={rec['outputs_match']}); "
+              f"{on['prefix']['hits']} hits, "
+              f"{on['prefix_hit_tokens']} prompt tokens reused, "
+              f"{on['cow_copies']} CoW copies, "
+              f"{on['shared_blocks']} blocks shared at end")
         return
 
     if args.mode == "spec":

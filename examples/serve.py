@@ -6,9 +6,13 @@ decode over every slot with per-row lengths, and finished slots are
 refilled from the queue mid-flight.  Pass ``--spec`` to layer speculative
 decoding on top: prompt-lookup drafts verified K+1 tokens at a time
 through the same mixed dispatch (greedy outputs are identical token for
-token — only the dispatch count changes).
+token — only the dispatch count changes).  Pass ``--prefix-cache`` to run
+the paged layout with cross-request prefix sharing: every request carries
+the same synthetic system prompt, so after the first author finishes its
+KV blocks admit later requests by page-table copy (plus at most one
+copy-on-write block) instead of re-prefilling.
 
-Run:  PYTHONPATH=src python examples/serve.py [--spec] [--spec-k 4]
+Run:  PYTHONPATH=src python examples/serve.py [--spec] [--prefix-cache]
 """
 
 import argparse
@@ -29,19 +33,29 @@ def main() -> None:
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max draft tokens per verify row")
     ap.add_argument("--drafter", default="plookup")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="paged KV + cross-request prefix sharing")
     args = ap.parse_args()
 
-    cfg = get_smoke_config("qwen-7b", d_model=256, d_ff=512, vocab_size=1024)
+    kv = (dict(kv_layout="paged", kv_block_size=16)
+          if args.prefix_cache else {})
+    cfg = get_smoke_config("qwen-7b", d_model=256, d_ff=512, vocab_size=1024,
+                           **kv)
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     qparams = quantize_model(params, "strategy2")   # W4A16 + log-scale sparse
 
     engine = Engine(cfg, qparams, batch_size=4, max_len=128,
                     spec_k=args.spec_k if args.spec else 0,
-                    drafter=args.drafter)
+                    drafter=args.drafter, prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
+    system = (rng.integers(0, cfg.vocab_size, 32)
+              if args.prefix_cache else rng.integers(0, cfg.vocab_size, 0))
     for rid in range(8):
-        prompt = rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
-        engine.submit(Request(rid=rid, prompt=prompt.astype(np.int32),
+        user = rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
+        engine.submit(Request(rid=rid,
+                              prompt=np.concatenate(
+                                  [system, user]).astype(np.int32),
                               max_new_tokens=16))
 
     done = engine.run()
@@ -58,6 +72,12 @@ def main() -> None:
               f"acceptance {s['acceptance_rate']:.2f} "
               f"({s['accepted_tokens']}/{s['draft_tokens']} drafts, "
               f"{s['rewinds']} rewinds)")
+    if engine.prefix_sharing:
+        p = engine.prefix_stats()
+        print(f"prefix cache: {p['hits']} hits "
+              f"({p['hit_tokens']} prompt tokens reused), "
+              f"{p['shared_blocks']} shared blocks, "
+              f"{p['cow_copies']} CoW copies")
     print(f"compile cache: {len(engine.cache_compiles)} executables, "
           f"{engine.cache_compiles.hits} hits / "
           f"{engine.cache_compiles.misses} misses (dynamic compilation)")

@@ -43,6 +43,13 @@ def main() -> None:
                     help="max draft tokens per verify row (with --spec)")
     ap.add_argument("--drafter", default="plookup",
                     help="draft proposer registry name (serving/draft.py)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="share cached prompt-prefix KV blocks across "
+                         "requests (paged transformer families)")
+    ap.add_argument("--system-prompt-len", type=int, default=24,
+                    help="shared synthetic system-prompt tokens prepended "
+                         "to every request (exercises --prefix-cache)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -58,16 +65,21 @@ def main() -> None:
 
     engine = Engine(cfg, params, batch_size=args.batch, max_len=args.max_len,
                     spec_k=args.spec_k if args.spec else 0,
-                    drafter=args.drafter)
+                    drafter=args.drafter, prefix_cache=args.prefix_cache)
     if args.spec and not engine.spec_k:
         print(f"speculation requested but family {cfg.family!r} has no "
               "rewindable sequence dimension — plain decode fallback")
+    if args.prefix_cache and not engine.prefix_sharing:
+        print(f"prefix cache requested but family {cfg.family!r} / layout "
+              f"{cfg.kv_layout!r} cannot share KV blocks — running without")
     rng = np.random.default_rng(0)
+    system = (rng.integers(0, cfg.vocab_size, args.system_prompt_len)
+              if args.prefix_cache else rng.integers(0, cfg.vocab_size, 0))
     for rid in range(args.requests):
+        user = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 32)))
         engine.submit(Request(
             rid=rid,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                int(rng.integers(4, 32))).astype(np.int32),
+            prompt=np.concatenate([system, user]).astype(np.int32),
             max_new_tokens=args.max_new_tokens))
     done = engine.run()
     print("summary:", Engine.summarize(done))
@@ -91,6 +103,13 @@ def main() -> None:
               f"{engine.peak_resident_tokens} tokens, "
               f"{engine.admission_stalls} admission stalls, "
               f"pool {engine.pool_stats()}")
+    if engine.prefix_sharing:
+        p = engine.prefix_stats()
+        print(f"prefix cache: {p['hits']} hits "
+              f"({p['hit_tokens']} prompt tokens reused), "
+              f"{p['shared_blocks']} shared blocks, "
+              f"{p['cow_copies']} CoW copies, "
+              f"{p['cached_blocks']} cached, {p['evictions']} evicted")
 
 
 if __name__ == "__main__":

@@ -164,19 +164,41 @@ def evict_slot(cfg: ModelConfig, cache: Params, slot, max_len: int) -> Params:
     return insert_request(cfg, cache, init_cache(cfg, 1, max_len), slot)
 
 
+def _bulk_prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  max_len: int):
+    """Whole-prompt prefill through the mixed-step chunk writer: one call
+    whose chunk IS the prompt (``q_lens[b] = S``), writing K/V at true
+    positions and — because ``mixed_step`` is bit-identical to sequential
+    ``decode_step`` — materializing the TRUE post-prompt state for every
+    family.  This is the bulk generalization of the serving chunk writer:
+    recurrent families no longer need a token-by-token loop to get an exact
+    state, and paged caches (which have no full-sequence ``attn_prefill``)
+    prefill through their normal write path under the default page table."""
+    b, s = tokens.shape
+    if s > max_len:
+        raise ValueError(f"prompt length {s} exceeds max_len {max_len}")
+    cache = init_cache(cfg, b, max_len)
+    lengths = jnp.zeros((b,), jnp.int32)
+    q_lens = jnp.full((b,), s, jnp.int32)
+    return mixed_step(cfg, params, cache, tokens, lengths, q_lens)
+
+
 def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int):
     tokens = batch["tokens"]
     if cfg.family in _TRANSFORMER_FAMILIES:
+        if cfg.kv_layout == "paged":
+            # shared-pool caches have no full-sequence attn_prefill; the
+            # bulk chunk writer routes the whole prompt through the paged
+            # scatter under the default (linear) page table
+            return _bulk_prefill(cfg, params, tokens, max_len)
         return transformer.prefill(cfg, params, tokens, max_len)
     if cfg.family == "audio":
         return whisper.prefill(cfg, params, batch["frames"], tokens, max_len)
     if cfg.family in ("ssm", "hybrid"):
-        # recurrent families prefill by teacher-forcing the full forward and
-        # materializing the state via sequential decode of the last token
-        # only when needed; for benchmarking we expose forward-as-prefill.
-        logits, _ = forward(cfg, params, batch)
-        cache = init_cache(cfg, tokens.shape[0], max_len)
-        return logits[:, -1], cache
+        # TRUE post-prompt recurrent state in one dispatch (the old
+        # forward-as-prefill surface returned a FRESH state and pushed
+        # offline evals into a token-by-token decode loop)
+        return _bulk_prefill(cfg, params, tokens, max_len)
     raise ValueError(f"unknown family {cfg.family!r}")
 
 
@@ -239,6 +261,50 @@ def supports_speculation(cfg: ModelConfig) -> bool:
     engine must fall back to plain decode for them.
     """
     return cfg.family in _TRANSFORMER_FAMILIES + ("audio",)
+
+
+def supports_prefix_cache(cfg: ModelConfig) -> bool:
+    """Whether cross-request prefix sharing can run on this config.
+
+    Sharing maps one physical KV block into many page tables, so it needs
+    (1) the paged layout and (2) K/V that is a pure function of the token
+    prefix.  Transformer families qualify: position ``p``'s K/V depends
+    only on tokens ``0..p`` (and the fixed params), and ``mixed_step`` is
+    bitwise equal to sequential decode, so a cached block is bit-identical
+    to what the admitted request would recompute.  Audio does NOT — its
+    decoder hidden states fold in per-request encoder output through cross
+    attention, so equal token prefixes do not imply equal K/V.  Recurrent
+    families (ssm, hybrid) carry per-slot state a shared block cannot
+    capture.
+    """
+    return cfg.kv_layout == "paged" and cfg.family in _TRANSFORMER_FAMILIES
+
+
+def copy_pool_block(cfg: ModelConfig, cache: Params, src, dst) -> Params:
+    """Copy one physical KV block ``src`` -> ``dst`` across every paged pool
+    leaf (all layers, scales included) — the device half of copy-on-write.
+
+    Serving writes are append-only, so sharing needs at most ONE copy per
+    admission: when the uncovered suffix starts mid-block, the engine leases
+    ``dst`` fresh and duplicates the shared block before the first chunk
+    write lands over its tail.  ``src``/``dst`` may be traced int32 scalars
+    (one executable regardless of which blocks move).  Transformer-family
+    pool leaves are ``(n_layers, P+1, hkv, bs, hd)`` — the pool axis is 1.
+    """
+    if not supports_prefix_cache(cfg):
+        raise ValueError(
+            f"copy_pool_block needs a prefix-shareable config, got "
+            f"family={cfg.family!r} kv_layout={cfg.kv_layout!r}")
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def cp(leaf, axis):
+        if axis != -1:          # per-slot leaf: nothing pooled to copy
+            return leaf
+        row = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, row, dst, axis=1)
+
+    return jax.tree.map(cp, cache, cache_slot_axes(cfg))
 
 
 def _mixed_step_scan(cfg: ModelConfig, params: Params, cache: Params,

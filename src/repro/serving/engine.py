@@ -88,6 +88,30 @@ dispatch instead:
   ``batch_size`` may exceed ``pool_tokens / max_len`` — short requests stop
   paying for long ones, which is the capacity lever
   ``benchmarks/serving_bench.py --paged-capacity`` measures.
+
+* **Prefix sharing (``prefix_cache=True``, paged transformer families).**
+  The free list becomes a refcounted ``BlockAllocator`` and a host-side
+  ``RadixPrefixCache`` maps block-aligned prompt prefixes to the physical
+  blocks that already hold their K/V (``serving/prefix.py``).  Admission of
+  a request whose prompt walks a cached path is a PAGE-TABLE COPY: the
+  shared blocks are increfed into the slot's table rows and only the
+  uncovered suffix streams through chunked prefill — no new executables and
+  no kernel changes, because the page table already rides in as a plain
+  operand and kernels only ever READ through it.  Serving writes are
+  append-only, so copy-on-write fires at most once per admission: when the
+  suffix starts mid-block, the engine leases a fresh block, duplicates the
+  shared one on device (the single ``("cow", 0)`` executable) and overwrites
+  its tail through the normal chunk writer.  Worst-case reservation shrinks
+  by the shared block count (the CoW page leases normally, so the "+1 CoW
+  block" stays inside the reservation) and ``sum(reserve) <= free`` stays
+  the deadlock-free invariant.  A finished prompt donates its fully-written
+  blocks back to the cache (one cache-held reference each), so hot system
+  prompts stay resident after their first author retires; under pool
+  pressure, admission evicts cold cache leaves LRU-first — but only blocks
+  the cache is the SOLE holder of, so shared residents are evicted last.
+  Sharing is exact: ``mixed_step`` is bitwise equal to sequential decode,
+  so cached K/V is bit-identical to a recompute and token streams match the
+  cache-OFF engine and ``reference_decode`` token for token.
 """
 
 from __future__ import annotations
@@ -104,6 +128,21 @@ import numpy as np
 from repro.core.compiler import CompileCache, TokenBuckets
 from repro.models import api
 from repro.models.config import ModelConfig
+from repro.serving.prefix import BlockAllocator, RadixPrefixCache
+
+
+@dataclasses.dataclass
+class _PrefixPlan:
+    """Host-side admission plan from a radix-cache hit (see module doc).
+
+    ``shared`` blocks map read-only into the slot's page table (one incref
+    each); ``cow`` is the one cached block whose matched HEAD is reused via
+    copy-on-write (None when the suffix starts block-aligned); ``consumed``
+    prompt tokens are covered without recompute — always < len(prompt), so
+    at least one prompt token runs and produces the first-token logits."""
+    shared: list[int]
+    cow: int | None
+    consumed: int
 
 
 @dataclasses.dataclass
@@ -217,6 +256,7 @@ class Engine:
                  prefill_token_budget: int | None = None,
                  prefill_policy: str = "mixed",
                  spec_k: int = 0, drafter: Any = "plookup",
+                 prefix_cache: bool = False,
                  compile_cache: CompileCache | None = None):
         if prefill_policy not in ("mixed", "stall"):
             raise ValueError(f"unknown prefill_policy {prefill_policy!r}")
@@ -298,12 +338,27 @@ class Engine:
             self.block_size, self.n_pages = paged_geometry(cfg, max_len)
             self.pool_blocks = paged_pool_blocks(cfg, batch_size, max_len)
             self._null_block = self.pool_blocks      # last pool row
-            self._free_blocks = list(range(self.pool_blocks))
+            self.alloc = BlockAllocator(self.pool_blocks)
             self._page_table = np.full((batch_size, self.n_pages),
                                        self._null_block, np.int32)
             self._slot_blocks: list[list[int]] = [[] for _ in
                                                   range(batch_size)]
             self._slot_reserve = [0] * batch_size    # worst-case not-yet-leased
+        # prefix sharing: radix cache over prompt tokens -> physical blocks.
+        # Gated to paged transformer families: recurrent state (ssm/hybrid)
+        # has no per-token block chain, and audio decoder K/V depends on the
+        # request's encoder output through cross-attention, so token-prefix
+        # equality does not imply K/V equality there.
+        self.prefix_requested = prefix_cache
+        self.prefix_sharing = bool(prefix_cache and self.paged and
+                                   api.supports_prefix_cache(cfg))
+        self.prefix = (RadixPrefixCache(self.block_size)
+                       if self.prefix_sharing else None)
+        self.prefix_hits = 0         # admissions that reused >= 1 block
+        self.prefix_hit_tokens = 0   # prompt tokens covered without recompute
+        self.cow_copies = 0          # copy-on-write block duplications
+        self.prefix_evictions = 0    # cache leaves dropped under pool pressure
+        self.peak_pool_blocks = 0    # high-water physical blocks in use
         self.admission_stalls = 0    # admissions held back by the block pool
         self.peak_resident_tokens = 0
         self.steps = 0
@@ -334,10 +389,13 @@ class Engine:
         n_chunk_buckets (mixed widths) + decode + insert.  Audio adds one
         ``("admit", F)`` encoder executable per DISTINCT frame count seen —
         traffic-dependent, so it is counted from the cache, keeping
-        ``misses <= compile_budget`` an invariant for any workload."""
+        ``misses <= compile_budget`` an invariant for any workload.  Prefix
+        sharing adds exactly one executable — the ``("cow", 0)`` block
+        copy — regardless of traffic."""
         extra = sum(1 for name, _ in self.cache_compiles.keys()
                     if name == "admit")
-        return len(self.chunk_buckets.all_buckets()) + 2 + extra
+        return (len(self.chunk_buckets.all_buckets()) + 2 + extra +
+                (1 if self.prefix_sharing else 0))
 
     # -- executables (all memoized: misses bounded by compile_budget) --------
 
@@ -354,7 +412,21 @@ class Engine:
     def _build_insert(self):
         return _insert_executable(self.cfg)
 
+    def _build_cow(self):
+        # one shape for every copy-on-write: (cache, src, dst) with traced
+        # scalar block ids, donated cache — memoized under ("cow", 0)
+        cfg = self.cfg
+        return jax.jit(
+            lambda c, s, d: api.copy_pool_block(cfg, c, s, d),
+            donate_argnums=(0,))
+
     # -- paged-KV block accounting -------------------------------------------
+
+    @property
+    def _free_blocks(self) -> list[int]:
+        """The allocator's free list (kept as the PR 5 attribute name: tests
+        and tools introspect it for leak checks)."""
+        return self.alloc.free
 
     def _worst_case_blocks(self, req: Request) -> int:
         """Blocks the request can ever hold: its prompt plus full generation,
@@ -362,14 +434,73 @@ class Engine:
         toks = min(len(req.prompt) + req.max_new_tokens, self.max_len)
         return -(-toks // self.block_size)
 
-    def _can_reserve(self, req: Request) -> bool:
+    def _prefix_plan(self, req: Request) -> _PrefixPlan | None:
+        """Match the prompt against the radix cache and plan the admission.
+
+        ``consumed`` is capped at ``len(prompt) - 1``: the final prompt token
+        must always run through a chunk to produce the first-token logits.
+        When the cache covers the WHOLE prompt, the last matched block is
+        demoted from shared to CoW source so that token has a writable page.
+        """
+        if self.prefix is None or len(req.prompt) < 2:
+            return None
+        full, partial = self.prefix.match(req.prompt)
+        consumed = len(full) * self.block_size
+        cow = None
+        if partial is not None:
+            blk, n = partial
+            n = min(n, len(req.prompt) - 1 - consumed)
+            if n > 0:
+                cow = blk
+                consumed += n
+        elif consumed >= len(req.prompt):
+            cow = full.pop()
+            consumed = len(req.prompt) - 1
+        if not full and cow is None:
+            return None
+        return _PrefixPlan(shared=full, cow=cow, consumed=consumed)
+
+    def _evict_for(self, n: int, plan: _PrefixPlan | None) -> int:
+        """Free up to ``n`` blocks by dropping cold radix-cache leaves
+        (LRU-first).  Only blocks the cache SOLELY holds actually free —
+        shared residents (refcount >= 2) and the current plan's blocks are
+        skipped, so cache pressure can never invalidate a live mapping or
+        the admission plan just computed.  Returns the blocks freed."""
+        protect = set()
+        if plan is not None:
+            protect.update(plan.shared)
+            if plan.cow is not None:
+                protect.add(plan.cow)
+        freed = 0
+        while freed < n:
+            blk = self.prefix.evict_lru(
+                keep=lambda b: b in protect or self.alloc.ref(b) > 1)
+            if blk is None:
+                break                       # nothing evictable left
+            self.prefix_evictions += 1
+            if not self.alloc.decref(blk):  # cache was sole holder: frees
+                raise RuntimeError(
+                    f"evicted cache block {blk} still live — keep() gate "
+                    "is wrong")
+            freed += 1
+        return freed
+
+    def _can_reserve(self, req: Request,
+                     plan: _PrefixPlan | None = None) -> bool:
         """Admission gate: unreserved free blocks must cover the request's
         worst case.  Every admitted row can then ALWAYS lease its next block
         (``sum(reserve) <= len(free)`` is invariant), so decode never stalls
         and the pool never deadlocks — pressure shows up as admission
-        stalls, never as a stuck batch."""
-        free = len(self._free_blocks) - sum(self._slot_reserve)
-        return self._worst_case_blocks(req) <= free
+        stalls, never as a stuck batch.  A prefix-cache hit shrinks the need
+        by its shared blocks (the CoW page leases normally, inside the
+        reservation); on a shortfall, cold cache leaves are evicted first."""
+        need = self._worst_case_blocks(req)
+        if plan is not None:
+            need -= len(plan.shared)
+        avail = self.alloc.n_free - sum(self._slot_reserve)
+        if need > avail and self.prefix is not None:
+            avail += self._evict_for(need - avail, plan)
+        return need <= avail
 
     def _lease_to(self, idx: int, new_len: int) -> None:
         """Grow slot ``idx`` to cover ``new_len`` tokens, leasing blocks as
@@ -377,10 +508,10 @@ class Engine:
         need = -(-new_len // self.block_size)
         owned = self._slot_blocks[idx]
         while len(owned) < need:
-            if not self._free_blocks:   # _can_reserve makes this unreachable
+            if not self.alloc.n_free:   # _can_reserve makes this unreachable
                 raise RuntimeError("paged KV pool exhausted despite "
                                    "reservation — allocator invariant broken")
-            blk = self._free_blocks.pop()
+            blk = self.alloc.lease()
             self._page_table[idx, len(owned)] = blk
             owned.append(blk)
             self._slot_reserve[idx] -= 1
@@ -390,14 +521,49 @@ class Engine:
                     "accounting is wrong")
 
     def pool_stats(self) -> dict[str, int]:
-        """Free-list invariants, exposed for leak/double-free checks."""
-        leased = sum(len(b) for b in self._slot_blocks)
+        """Free-list invariants, exposed for leak/double-free checks.
+
+        ``leased`` counts LIVE physical blocks (refcount >= 1), so ``free +
+        leased == total`` stays the partition invariant under sharing —
+        a block mapped by three slots and the cache is still ONE block."""
         return {
             "total": self.pool_blocks,
-            "free": len(self._free_blocks),
-            "leased": leased,
+            "free": self.alloc.n_free,
+            "leased": self.alloc.n_live,
             "reserved_outstanding": sum(self._slot_reserve),
+            "shared_blocks": self.alloc.n_shared(),
+            "cached_blocks": (len(self.prefix)
+                              if self.prefix is not None else 0),
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "cow_copies": self.cow_copies,
+            "prefix_evictions": self.prefix_evictions,
         }
+
+    def prefix_stats(self) -> dict[str, int]:
+        """Prefix-cache counters (subset of ``pool_stats`` plus the gate)."""
+        return {
+            "enabled": self.prefix_sharing,
+            "requested": self.prefix_requested,
+            "hits": self.prefix_hits,
+            "hit_tokens": self.prefix_hit_tokens,
+            "cow_copies": self.cow_copies,
+            "evictions": self.prefix_evictions,
+            "cached_blocks": (len(self.prefix)
+                              if self.prefix is not None else 0),
+            "shared_blocks": self.alloc.n_shared() if self.paged else 0,
+        }
+
+    def drop_prefix_cache(self) -> int:
+        """Flush the radix cache, releasing every cache-held block reference
+        (cold-workload reset; also how leak checks prove the cache holds
+        exactly one reference per node).  Returns the nodes dropped."""
+        if self.prefix is None:
+            return 0
+        blocks = self.prefix.clear()
+        for blk in blocks:
+            self.alloc.decref(blk)
+        return len(blocks)
 
     # -- internals -----------------------------------------------------------
 
@@ -412,15 +578,16 @@ class Engine:
         reset by the next admission's ``insert_request`` — so retirement
         costs no device dispatch.  The dead row rides along in later ticks
         at q_len 0 / its parked length; its output is ignored.  Paged: the
-        row's blocks return to the free list and its page-table row is
-        pointed at the null block, so a stale lease can never alias a block
-        the next occupant is handed."""
+        row's block references are DROPPED — a block returns to the free
+        list only when no other slot (and not the radix cache) still maps
+        it — and its page-table row is pointed at the null block, so a
+        stale lease can never alias a block the next occupant is handed."""
         if self.paged:
             for blk in self._slot_blocks[idx]:
-                if blk in self._free_blocks:
-                    raise RuntimeError(
-                        f"double free of KV block {blk} (slot {idx})")
-                self._free_blocks.append(blk)
+                try:
+                    self.alloc.decref(blk)
+                except RuntimeError as e:
+                    raise RuntimeError(f"{e} (slot {idx})") from None
             self._slot_blocks[idx] = []
             self._slot_reserve[idx] = 0
             self._page_table[idx, :] = self._null_block
@@ -436,7 +603,11 @@ class Engine:
         are re-nulled in the page table and returned to the free list, and
         the blocks go BACK into the slot's worst-case reservation (it may
         legitimately lease them again), so ``sum(reserve) <= free`` and
-        free+leased accounting stay invariant."""
+        free+leased accounting stay invariant.  Under prefix sharing a
+        rewound tail block is always PRIVATE (shared blocks cover at most
+        ``len(prompt) - 1`` tokens and speculation only rewinds past the
+        prompt), so the decref here really frees — but refcounts make even
+        an artificial shared rewind safe."""
         slot = self._slots[idx]
         if new_len > self.max_len:
             raise ValueError(f"rewind to {new_len} exceeds max_len")
@@ -448,19 +619,64 @@ class Engine:
             while len(owned) > keep:
                 blk = owned.pop()
                 self._page_table[idx, len(owned)] = self._null_block
-                if blk in self._free_blocks:
-                    raise RuntimeError(
-                        f"double free of KV block {blk} (rewind slot {idx})")
-                self._free_blocks.append(blk)
+                try:
+                    self.alloc.decref(blk)
+                except RuntimeError as e:
+                    raise RuntimeError(f"{e} (rewind slot {idx})") from None
                 self._slot_reserve[idx] += 1
 
-    def _admit(self, req: Request, idx: int) -> None:
+    def _cow_block(self, idx: int, src: int) -> None:
+        """Copy-on-write: lease a private block for slot ``idx``'s next page
+        and duplicate shared block ``src`` into it on device.  The matched
+        head of the copy is live (bit-identical K/V); its stale tail sits
+        past the slot's length until the normal chunk writer overwrites it.
+        The lease consumes the slot's reservation like any other, so the
+        "+1 CoW block" is already inside the admission accounting."""
+        page = len(self._slot_blocks[idx])
+        if not self.alloc.n_free:   # _can_reserve makes this unreachable
+            raise RuntimeError("paged KV pool exhausted despite "
+                               "reservation — CoW accounting is wrong")
+        dst = self.alloc.lease()
+        self._page_table[idx, page] = dst
+        self._slot_blocks[idx].append(dst)
+        self._slot_reserve[idx] -= 1
+        fn = self.cache_compiles.get("cow", 0, self._build_cow)
+        self.cache = fn(self.cache, np.int32(src), np.int32(dst))
+        self.cow_copies += 1
+
+    def _cache_prompt(self, idx: int) -> None:
+        """Prefill just finished for slot ``idx``: donate the prompt's fully
+        written blocks to the radix cache.  The cache holds ONE reference
+        per node it newly created; dedup (a concurrent identical prompt)
+        keeps the first author's block and the duplicate stays private."""
+        prompt = self._slots[idx].req.prompt
+        nfull = len(prompt) // self.block_size
+        if nfull == 0:
+            return
+        fresh = self.prefix.insert(np.asarray(prompt)[:nfull *
+                                                      self.block_size],
+                                   self._slot_blocks[idx][:nfull])
+        for blk in fresh:
+            self.alloc.incref(blk)
+
+    def _admit(self, req: Request, idx: int,
+               plan: _PrefixPlan | None = None) -> None:
         """Lease slot ``idx`` to ``req``.  No prefill dispatch happens here:
         the prompt streams through subsequent mixed ticks.  Stateful
         families scatter a fresh ``request_cache`` row into the slot first
-        (recurrent-state reset; audio also carries the request's cross-KV)."""
+        (recurrent-state reset; audio also carries the request's cross-KV).
+        A prefix-cache ``plan`` maps the shared blocks into the page table
+        (incref each), optionally CoW-copies one partial block, and starts
+        the chunk cursor at the first uncovered prompt token."""
         if self.paged:
-            self._slot_reserve[idx] = self._worst_case_blocks(req)
+            shared = list(plan.shared) if plan is not None else []
+            self._slot_reserve[idx] = (self._worst_case_blocks(req) -
+                                       len(shared))
+            for page, blk in enumerate(shared):
+                self.alloc.incref(blk)
+                self._page_table[idx, page] = blk
+            if shared:
+                self._slot_blocks[idx] = shared
         if api.needs_admission_insert(self.cfg):
             if self.cfg.family == "audio":
                 f = np.asarray(req.frames)
@@ -475,6 +691,13 @@ class Engine:
                                              self._build_insert)
             self.cache = insert(self.cache, row, np.int32(idx))
         self._slots[idx] = _Slot(req=req)
+        if plan is not None:
+            if plan.cow is not None:
+                self._cow_block(idx, plan.cow)
+            s = self._slots[idx]
+            s.length = s.pos = plan.consumed
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += plan.consumed
         self._draft_wait[idx] = self._draft_penalty[idx] = 0
         if self.drafter is not None:
             # seed the drafter with the full prompt (prompt-lookup proper):
@@ -586,10 +809,12 @@ class Engine:
             # reservation — a held-back head request is an admission stall
             for i in range(self.batch):
                 if self._slots[i].req is None and self._queue:
-                    if self.paged and not self._can_reserve(self._queue[0]):
+                    plan = self._prefix_plan(self._queue[0])
+                    if self.paged and not self._can_reserve(self._queue[0],
+                                                            plan):
                         self.admission_stalls += 1
                         break
-                    self._admit(self._queue.popleft(), i)
+                    self._admit(self._queue.popleft(), i, plan)
             live = [i for i, s in enumerate(self._slots) if s.req is not None]
             if not live:
                 break  # queue drained (or fully stalled) and no row in flight
@@ -672,6 +897,10 @@ class Engine:
             self.steps += 1
             self.dispatches += 1
             self._occupancy_sum += len(live) / self.batch
+            if self.paged:
+                self.peak_pool_blocks = max(
+                    self.peak_pool_blocks,
+                    self.pool_blocks - self.alloc.n_free)
             self.peak_resident_tokens = max(
                 self.peak_resident_tokens,
                 sum(self._slots[i].length + chunks[i] + (i in decoding) +
@@ -687,6 +916,9 @@ class Engine:
                     slot.pos += chunks[i]
                     slot.length += chunks[i]
                     if slot.pos == len(slot.req.prompt):
+                        if self.prefix is not None:
+                            # fully-written prompt blocks join the cache
+                            self._cache_prompt(i)
                         # final chunk: this row's logits are its first token
                         tok = (int(next_np[i]) if sample is None
                                else int(sample(logits_np[i])))

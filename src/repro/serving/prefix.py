@@ -1,0 +1,262 @@
+"""Prefix sharing: refcounted block allocator + radix prompt cache.
+
+EdgeLLM's memory premise (one data shape per operator, tight HBM budgets)
+makes repeated prefill the worst place to spend edge bandwidth: millions of
+users open with the same system prompts and few-shot headers, and the paged
+engine (PR 5) re-prefilled them per request and held a private copy of
+every block.  The pool's null-block write routing already tolerates
+read-only aliasing — many page tables may point at the same physical block
+as long as nobody writes through it — so sharing needs exactly two pieces
+of HOST bookkeeping, both here:
+
+* **``BlockAllocator``** — the engine's free list with per-block refcounts.
+  A freshly leased block has refcount 1 (its slot); mapping the same block
+  into another slot's page table ``incref``s it; retiring/rewinding a slot
+  ``decref``s instead of freeing, and a block returns to the free list only
+  at refcount 0.  The PR 5 leak/double-free invariants generalize: every
+  block is either free with refcount 0, or live with refcount >= 1 — a
+  decref at 0 is a double free, and ``check()`` asserts the partition.
+
+* **``RadixPrefixCache``** — a radix tree over prompt tokens (per engine,
+  so per (cfg, params) identity) whose edges are BLOCK-sized token runs and
+  whose nodes name the fully-written physical block holding that run's K/V.
+  Admission of a prompt that walks a cached path becomes a page-table copy
+  (incref the shared blocks) plus chunked prefill of only the uncovered
+  suffix.  A divergence MID-block still salvages the matched head of the
+  next cached block: the engine copies that one block (copy-on-write — the
+  only copy sharing ever does, because serving writes are append-only) and
+  overwrites from the divergence point.  Cache residency itself holds one
+  reference per node, so cached blocks survive their author's retirement
+  and are evicted LRU-last under pool pressure (leaf nodes only, so every
+  cached path stays reachable root-to-node).
+
+Sharing is exact, not approximate: ``mixed_step`` is bitwise equal to
+sequential ``decode_step`` (the PR 3 invariant), so the K/V a cached block
+holds is bit-identical to what the admitted request would have recomputed —
+token streams with the cache ON match the cache-OFF engine and the
+``reference_decode`` oracle exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+
+class BlockAllocator:
+    """Refcounted free-list allocator over ``n_blocks`` physical KV blocks.
+
+    Pure host bookkeeping (no device state).  The free list is LIFO like the
+    PR 5 allocator it replaces, so lease order — and therefore the block
+    recycling the paged tests scramble — is unchanged when every refcount
+    stays at 1.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError(f"need >= 1 block, got {n_blocks}")
+        self.n_blocks = n_blocks
+        self.free: list[int] = list(range(n_blocks))
+        self.refs: list[int] = [0] * n_blocks
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def n_live(self) -> int:
+        return sum(1 for r in self.refs if r > 0)
+
+    def ref(self, blk: int) -> int:
+        return self.refs[blk]
+
+    def lease(self) -> int:
+        """Take a free block (refcount 0 -> 1)."""
+        if not self.free:
+            raise RuntimeError("KV block pool exhausted")
+        blk = self.free.pop()
+        if self.refs[blk] != 0:
+            raise RuntimeError(
+                f"free list corrupt: block {blk} freed at refcount "
+                f"{self.refs[blk]}")
+        self.refs[blk] = 1
+        return blk
+
+    def incref(self, blk: int) -> None:
+        """Add a holder to a LIVE block (sharing an already-written block)."""
+        if self.refs[blk] < 1:
+            raise RuntimeError(
+                f"incref of dead KV block {blk} — a shared mapping must "
+                "target a live block")
+        self.refs[blk] += 1
+
+    def decref(self, blk: int) -> bool:
+        """Drop one holder; returns True when the block went back to the
+        free list (refcount hit 0)."""
+        if self.refs[blk] <= 0:
+            raise RuntimeError(f"double free of KV block {blk}")
+        self.refs[blk] -= 1
+        if self.refs[blk] == 0:
+            self.free.append(blk)
+            return True
+        return False
+
+    def n_shared(self) -> int:
+        """Blocks currently mapped by more than one holder."""
+        return sum(1 for r in self.refs if r >= 2)
+
+    def check(self) -> None:
+        """The allocator partition invariant: every block is either on the
+        free list with refcount 0, or off it with refcount >= 1."""
+        if sorted(set(self.free)) != sorted(self.free):
+            raise AssertionError("free list holds duplicate block ids")
+        free = set(self.free)
+        if not free <= set(range(self.n_blocks)):
+            raise AssertionError("free list holds foreign block ids")
+        for blk, r in enumerate(self.refs):
+            if (blk in free) == (r > 0):
+                raise AssertionError(
+                    f"block {blk}: refcount {r} vs free={blk in free} — "
+                    "leak or double lease")
+
+
+class _Node:
+    """One radix edge: ``tokens`` (exactly ``block_size`` ids) labels the
+    edge from ``parent``; ``block`` is the physical block whose K/V was
+    written from those tokens at this tree depth."""
+
+    __slots__ = ("tokens", "block", "children", "parent", "last_used")
+
+    def __init__(self, tokens: tuple, block: int, parent):
+        self.tokens = tokens
+        self.block = block
+        self.children: dict[tuple, _Node] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+class RadixPrefixCache:
+    """Radix tree over prompt tokens at KV-block granularity.
+
+    Edges are ``block_size``-token runs; a node maps its root-to-node token
+    path to the physical block holding that run's K/V.  Matching returns the
+    longest fully-cached block chain plus, at the divergence point, the
+    longest PARTIAL head of any next cached block (the engine turns that
+    into a copy-on-write admission).  Eviction removes least-recently-used
+    LEAF nodes only, so every surviving node's path stays walkable.
+    """
+
+    def __init__(self, block_size: int):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.block_size = block_size
+        self.root: dict[tuple, _Node] = {}
+        self._nodes: list[_Node] = []
+        self._clock = 0          # LRU timestamps without wall-clock time
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def blocks(self) -> list[int]:
+        """Every block the cache currently holds a reference on."""
+        return [n.block for n in self._nodes]
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def match(self, tokens) -> tuple[list[int], tuple[int, int] | None]:
+        """Longest cached prefix of ``tokens``.
+
+        Returns ``(full_blocks, partial)``: ``full_blocks`` is the chain of
+        physical blocks covering ``len(full_blocks) * block_size`` leading
+        tokens exactly; ``partial`` is ``(block, n)`` when the next cached
+        edge agrees with the following ``n`` (``0 < n < block_size``) tokens
+        — reusable only via copy-on-write, since its tail differs.  Every
+        node on the walk (and the partial node) is LRU-touched.
+        """
+        toks = [int(t) for t in tokens]
+        bs = self.block_size
+        now = self._tick()
+        level, full, i = self.root, [], 0
+        while True:
+            chunk = tuple(toks[i:i + bs])
+            if len(chunk) == bs and chunk in level:
+                node = level[chunk]
+                node.last_used = now
+                full.append(node.block)
+                i += bs
+                level = node.children
+                continue
+            best: tuple[_Node, int] | None = None
+            rest = toks[i:]
+            for key, child in level.items():
+                n = 0
+                for a, b in zip(key, rest):
+                    if a != b:
+                        break
+                    n += 1
+                if n and (best is None or n > best[1]):
+                    best = (child, n)
+            if best is None:
+                return full, None
+            best[0].last_used = now
+            return full, (best[0].block, best[1])
+
+    def insert(self, tokens, blocks: Iterable[int]) -> list[int]:
+        """Register ``blocks`` as the fully-written chain for ``tokens``
+        (``len(tokens) == len(blocks) * block_size``).  Existing nodes win —
+        concurrent identical prompts keep the FIRST author's block, and the
+        duplicate block stays private to its slot.  Returns the blocks of
+        newly created nodes; the caller holds the cache's reference on
+        exactly those (one incref each).
+        """
+        toks = [int(t) for t in tokens]
+        blocks = list(blocks)
+        bs = self.block_size
+        if len(toks) != len(blocks) * bs:
+            raise ValueError(
+                f"{len(toks)} tokens cannot map {len(blocks)} blocks of "
+                f"{bs} — only whole fully-written blocks are cacheable")
+        now = self._tick()
+        level, parent, fresh = self.root, None, []
+        for j, blk in enumerate(blocks):
+            chunk = tuple(toks[j * bs:(j + 1) * bs])
+            node = level.get(chunk)
+            if node is None:
+                node = _Node(chunk, int(blk), parent)
+                level[chunk] = node
+                self._nodes.append(node)
+                fresh.append(int(blk))
+            node.last_used = now
+            parent, level = node, node.children
+        return fresh
+
+    def evict_lru(self, keep: Callable[[int], bool] | None = None
+                  ) -> int | None:
+        """Remove the least-recently-used LEAF node (skipping blocks for
+        which ``keep(block)`` is True) and return its block — the caller
+        drops the cache's reference on it.  Returns None when nothing is
+        evictable.  Leaf-only eviction keeps every cached path reachable;
+        repeated calls peel a cold chain back from its tip.
+        """
+        victim = None
+        for node in self._nodes:
+            if node.children:
+                continue
+            if keep is not None and keep(node.block):
+                continue
+            if victim is None or node.last_used < victim.last_used:
+                victim = node
+        if victim is None:
+            return None
+        level = victim.parent.children if victim.parent else self.root
+        del level[victim.tokens]
+        self._nodes.remove(victim)
+        return victim.block
+
+    def clear(self) -> list[int]:
+        """Drop every node; returns their blocks for the caller to decref."""
+        blocks = [n.block for n in self._nodes]
+        self.root = {}
+        self._nodes = []
+        return blocks

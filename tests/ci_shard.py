@@ -31,10 +31,11 @@ WEIGHTS = {
     "test_mixed.py": 27,
     "test_paged_engine.py": 11,
     "test_paged_fuzz.py": 14,
+    "test_prefix.py": 27,
     "test_quant.py": 10,
     "test_serving.py": 12,
     "test_sparsity.py": 14,
-    "test_spec.py": 26,
+    "test_spec.py": 27,
     "test_substrate.py": 24,
 }
 DEFAULT_WEIGHT = 15
