@@ -489,6 +489,128 @@ def run_spec(cfg, params, *, batch: int = 4, max_len: int = 128,
 
 
 # ---------------------------------------------------------------------------
+# overload mode (past-capacity: stall-only vs preemption + deadlines)
+# ---------------------------------------------------------------------------
+
+def _overload_workload(cfg, *, hogs: int, interactive: int, hog_new: int,
+                       int_new: int, deadline_s: float, seed: int = 9):
+    """Past-capacity mix: ``hogs`` low-priority long generations that FIFO
+    admission seats first and that hold their slots for ~``hog_new`` ticks,
+    plus ``interactive`` high-priority short requests with a deadline that
+    only fits if they do NOT wait behind the hogs."""
+    rng = np.random.default_rng(seed)
+    hog_reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            8).astype(np.int32),
+                        max_new_tokens=hog_new, priority=0)
+                for i in range(hogs)]
+    int_reqs = [Request(rid=100 + i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            8).astype(np.int32),
+                        max_new_tokens=int_new, priority=1,
+                        deadline_s=deadline_s)
+                for i in range(interactive)]
+    return hog_reqs, int_reqs
+
+
+def _overload_trial(cfg, params, *, resilient: bool, batch: int,
+                    max_len: int, deadline_s: float, hog_new: int,
+                    int_new: int, hogs: int, interactive: int,
+                    compile_cache: CompileCache | None = None):
+    """One past-capacity run.  ``resilient`` turns on bounded preemption +
+    deadline enforcement; the baseline is the stall-only engine (requests
+    keep their deadlines for POST-HOC goodput accounting, but nothing is
+    evicted or expired).  Goodput counts only tokens of requests that
+    finished ``done`` within their deadline."""
+    engine = Engine(cfg, params, batch_size=batch, max_len=max_len,
+                    chunk_size=16,
+                    max_preemptions=1 if resilient else 0,
+                    enforce_deadlines=resilient,
+                    compile_cache=compile_cache)
+    hog_reqs, int_reqs = _overload_workload(
+        cfg, hogs=hogs, interactive=interactive, hog_new=hog_new,
+        int_new=int_new, deadline_s=deadline_s)
+    for r in hog_reqs + int_reqs:       # hogs first: FIFO seats them
+        engine.submit(r)
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+    reqs = hog_reqs + int_reqs
+
+    def in_deadline(r):
+        return (r.deadline_s is None or
+                (r.finished_at or 1e30) - r.submitted_at <= r.deadline_s)
+
+    good = sum(len(r.output) for r in reqs
+               if r.status == "done" and in_deadline(r))
+    misses = sum(1 for r in int_reqs
+                 if r.status != "done" or not in_deadline(r))
+    ttft = [r.first_token_at - r.submitted_at for r in int_reqs
+            if r.first_token_at is not None]
+    return {
+        "resilient": resilient,
+        "wall_s": dt,
+        "goodput_tokens_per_s": good / dt,
+        "goodput_tokens": good,
+        "total_tokens": sum(len(r.output) for r in reqs),
+        "deadline_miss_rate": misses / len(int_reqs),
+        "interactive_ttft_p99_ms": (float(np.percentile(ttft, 99) * 1e3)
+                                    if ttft else None),
+        "preemptions": engine.preemptions,
+        "deadline_kills": engine.deadline_misses,
+        "admission_stalls": engine.admission_stalls,
+        "steps": engine.steps,
+    }, engine.cache_compiles
+
+
+def run_overload(cfg, params, *, batch: int = 4, max_len: int = 128,
+                 hogs: int = 4, interactive: int = 8, hog_new: int = 64,
+                 int_new: int = 6, deadline_ticks: int = 40) -> dict:
+    """Sustained past-capacity load: stall-only vs preemption + deadlines.
+
+    The offered load is 3x slot capacity (12 concurrent requests on 4
+    slots) and FIFO seats the hogs first, so the stall baseline makes every
+    interactive request wait ~``hog_new`` ticks for a slot — far past its
+    deadline.  The resilient engine priority-preempts hogs (losslessly,
+    bounded at 1 each) so interactive requests run immediately and meet it.
+    Deadlines are wall-clock, so the budget is calibrated in TICKS: a warm
+    probe run measures the per-tick wall time and ``deadline_ticks`` (less
+    than the hogs' slot-holding time, multiples of the interactive service
+    time) converts to seconds."""
+    # warm compiles the executable set; the probe then measures the true
+    # per-tick wall time (compilation excluded — it would inflate the
+    # deadline budget ~10x and nothing would ever miss)
+    warm = dict(batch=batch, max_len=max_len, deadline_s=1e9,
+                hog_new=hog_new, int_new=int_new, hogs=hogs,
+                interactive=interactive)
+    _, cc = _overload_trial(cfg, params, resilient=True, **warm)
+    probe, cc = _overload_trial(cfg, params, resilient=True,
+                                compile_cache=cc, **warm)
+    tick_s = probe["wall_s"] / probe["steps"]
+    deadline_s = deadline_ticks * tick_s
+    kw = dict(batch=batch, max_len=max_len, deadline_s=deadline_s,
+              hog_new=hog_new, int_new=int_new, hogs=hogs,
+              interactive=interactive, compile_cache=cc)
+    stall, cc = _overload_trial(cfg, params, resilient=False, **kw)
+    kw["compile_cache"] = cc
+    resilient, cc = _overload_trial(cfg, params, resilient=True, **kw)
+    return {
+        "config": {"arch": cfg.name, "batch": batch, "max_len": max_len,
+                   "hogs": hogs, "interactive": interactive,
+                   "hog_new": hog_new, "int_new": int_new,
+                   "deadline_ticks": deadline_ticks,
+                   "deadline_ms": deadline_s * 1e3,
+                   "offered_load_x": (hogs + interactive) / batch},
+        "stall_baseline": stall,
+        "resilient": resilient,
+        "goodput_gain": (resilient["goodput_tokens_per_s"] /
+                         max(stall["goodput_tokens_per_s"], 1e-9)),
+        "miss_rate_drop": (stall["deadline_miss_rate"] -
+                           resilient["deadline_miss_rate"]),
+    }
+
+
+# ---------------------------------------------------------------------------
 # drivers
 # ---------------------------------------------------------------------------
 
@@ -537,6 +659,14 @@ def rows() -> list[tuple[str, float, str]]:
          f"hit_tokens={pfx['sharing']['prefix_hit_tokens']} "
          f"cow={pfx['sharing']['cow_copies']} "
          f"match={pfx['outputs_match']}"))
+    ovl = run_overload(cfg, params)
+    out.append(
+        ("serving/overload_goodput_tok",
+         1e6 / max(ovl["resilient"]["goodput_tokens_per_s"], 1e-9),
+         f"goodput_gain={ovl['goodput_gain']:.2f}x "
+         f"miss={ovl['resilient']['deadline_miss_rate']:.2f}"
+         f"<-{ovl['stall_baseline']['deadline_miss_rate']:.2f} "
+         f"preempt={ovl['resilient']['preemptions']}"))
     return out
 
 
@@ -562,6 +692,9 @@ def run_smoke(path: str = "BENCH_serving.json") -> dict:
     # prefix-sharing cut: shared-system-prompt workload, sharing ON vs OFF
     # at equal KV HBM budget (cached TTFT + concurrency, outputs checked)
     record["prefix_sharing"] = run_prefix_sharing(cfg, params)
+    # overload cut: past-capacity workload, stall-only baseline vs bounded
+    # preemption + deadline enforcement (goodput must strictly dominate)
+    record["overload"] = run_overload(cfg, params)
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
     print(json.dumps(record, indent=2, sort_keys=True))
@@ -571,7 +704,8 @@ def run_smoke(path: str = "BENCH_serving.json") -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="mixed",
-                    choices=["mixed", "throughput", "spec", "prefix"])
+                    choices=["mixed", "throughput", "spec", "prefix",
+                             "overload"])
     ap.add_argument("--arch", default="qwen-7b")
     ap.add_argument("--batches", default="1,2,4,8")
     ap.add_argument("--queue-depths", default="8,16")
@@ -630,6 +764,28 @@ def main() -> None:
               f"{on['prefix_hit_tokens']} prompt tokens reused, "
               f"{on['cow_copies']} CoW copies, "
               f"{on['shared_blocks']} blocks shared at end")
+        return
+
+    if args.mode == "overload":
+        rec = run_overload(cfg, params, max_len=args.max_len)
+        c = rec["config"]
+        print(f"arch={cfg.name} offered load {c['offered_load_x']:.1f}x "
+              f"slot capacity ({c['hogs']} hogs x {c['hog_new']} tokens + "
+              f"{c['interactive']} interactive x {c['int_new']}, deadline "
+              f"{c['deadline_ms']:.0f} ms = {c['deadline_ticks']} ticks)")
+        print(f"{'engine':>10} {'goodput/s':>10} {'miss':>6} {'ttft_p99':>9} "
+              f"{'preempt':>8} {'kills':>6} {'stalls':>7} {'steps':>6}")
+        for key, name in (("stall_baseline", "stall"),
+                          ("resilient", "resilient")):
+            r = rec[key]
+            t = (f"{r['interactive_ttft_p99_ms']:>8.1f}m"
+                 if r["interactive_ttft_p99_ms"] is not None else f"{'-':>9}")
+            print(f"{name:>10} {r['goodput_tokens_per_s']:>10.1f} "
+                  f"{r['deadline_miss_rate']:>6.2f} {t} "
+                  f"{r['preemptions']:>8} {r['deadline_kills']:>6} "
+                  f"{r['admission_stalls']:>7} {r['steps']:>6}")
+        print(f"preemption+deadlines: {rec['goodput_gain']:.2f}x goodput, "
+              f"miss rate -{rec['miss_rate_drop']:.2f} vs stall-only")
         return
 
     if args.mode == "spec":

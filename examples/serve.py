@@ -10,9 +10,15 @@ token — only the dispatch count changes).  Pass ``--prefix-cache`` to run
 the paged layout with cross-request prefix sharing: every request carries
 the same synthetic system prompt, so after the first author finishes its
 KV blocks admit later requests by page-table copy (plus at most one
-copy-on-write block) instead of re-prefilling.
+copy-on-write block) instead of re-prefilling.  Pass ``--chaos`` to inject
+deterministic faults (reservation denials, forced preemptions, NaN rows)
+and watch the lifecycle absorb them: faulted rows finish
+``status="error"``, preempted requests requeue losslessly (bounded by
+``--max-preemptions``), ``--deadline-s`` expires laggards, and everything
+else still matches the batch-1 oracle bitwise.
 
 Run:  PYTHONPATH=src python examples/serve.py [--spec] [--prefix-cache]
+      PYTHONPATH=src python examples/serve.py --chaos --max-preemptions 2
 """
 
 import argparse
@@ -36,6 +42,14 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=False,
                     help="paged KV + cross-request prefix sharing")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline (seconds after submit); "
+                         "expired requests finish status=deadline_missed")
+    ap.add_argument("--max-preemptions", type=int, default=0,
+                    help="lossless evict-and-requeue bound per request "
+                         "(0 = stall-only admission)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded fault injection (repro.serving.chaos)")
     args = ap.parse_args()
 
     kv = (dict(kv_layout="paged", kv_block_size=16)
@@ -45,9 +59,15 @@ def main() -> None:
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     qparams = quantize_model(params, "strategy2")   # W4A16 + log-scale sparse
 
+    chaos = None
+    if args.chaos:
+        from repro.serving.chaos import ChaosConfig, ChaosMonkey
+        chaos = ChaosMonkey(ChaosConfig(seed=0, deny_rate=0.05,
+                                        preempt_rate=0.1, nan_rate=0.02))
     engine = Engine(cfg, qparams, batch_size=4, max_len=128,
                     spec_k=args.spec_k if args.spec else 0,
-                    drafter=args.drafter, prefix_cache=args.prefix_cache)
+                    drafter=args.drafter, prefix_cache=args.prefix_cache,
+                    max_preemptions=args.max_preemptions, chaos=chaos)
     rng = np.random.default_rng(0)
     system = (rng.integers(0, cfg.vocab_size, 32)
               if args.prefix_cache else rng.integers(0, cfg.vocab_size, 0))
@@ -56,12 +76,17 @@ def main() -> None:
         engine.submit(Request(rid=rid,
                               prompt=np.concatenate(
                                   [system, user]).astype(np.int32),
-                              max_new_tokens=16))
+                              max_new_tokens=16,
+                              deadline_s=args.deadline_s))
 
     done = engine.run()
     for r in sorted(done, key=lambda r: r.rid):
-        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.output[:8]}...")
+        tag = "" if r.status == "done" else f" [{r.status}]"
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> "
+              f"{r.output[:8]}...{tag}")
     print("summary:", Engine.summarize(done))
+    if chaos is not None or args.max_preemptions or args.deadline_s:
+        print("resilience:", engine.resilience_stats())
     print(f"scheduler: {engine.steps} batched ticks "
           f"({engine.dispatches} dispatches, {engine.mixed_ticks} mixed), "
           f"slot occupancy {engine.slot_occupancy:.2f}")

@@ -50,6 +50,37 @@ def main() -> None:
     ap.add_argument("--system-prompt-len", type=int, default=24,
                     help="shared synthetic system-prompt tokens prepended "
                          "to every request (exercises --prefix-cache)")
+    # resilience / lifecycle knobs (ISSUE 8)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds after submit; "
+                         "expired requests finish status=deadline_missed "
+                         "(queued or mid-flight)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="priority assigned to every synthetic request "
+                         "(higher admits/keeps first under preemption)")
+    ap.add_argument("--max-preemptions", type=int, default=0,
+                    help="evict-and-requeue bound per request; 0 disables "
+                         "preemption (stall-only admission, the old "
+                         "behavior).  Preemption is lossless: accepted "
+                         "output folds into the prompt and, under "
+                         "--prefix-cache, the victim's KV blocks are "
+                         "donated so re-admission is a page-table copy")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run Engine.audit() (allocator partition, "
+                         "reservation, page-table coherence) every N "
+                         "ticks; 0 disables")
+    ap.add_argument("--chaos", action="store_true",
+                    help="attach a seeded ChaosMonkey (serving/chaos.py): "
+                         "deterministic fault injection into this run")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-deny-rate", type=float, default=0.05,
+                    help="P(reservation denied) per admission attempt")
+    ap.add_argument("--chaos-preempt-rate", type=float, default=0.05,
+                    help="P(forced preemption) per tick (needs "
+                         "--max-preemptions > 0)")
+    ap.add_argument("--chaos-nan-rate", type=float, default=0.01,
+                    help="P(logits row -> NaN) per advancing row; faulted "
+                         "rows quarantine with status=error")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
@@ -63,9 +94,18 @@ def main() -> None:
     print(f"arch={cfg.name} packed={quantized_bytes(params)/1e6:.1f} MB "
           f"strategy={args.strategy}")
 
+    chaos = None
+    if args.chaos:
+        from repro.serving.chaos import ChaosConfig, ChaosMonkey
+        chaos = ChaosMonkey(ChaosConfig(
+            seed=args.chaos_seed, deny_rate=args.chaos_deny_rate,
+            preempt_rate=args.chaos_preempt_rate,
+            nan_rate=args.chaos_nan_rate))
     engine = Engine(cfg, params, batch_size=args.batch, max_len=args.max_len,
                     spec_k=args.spec_k if args.spec else 0,
-                    drafter=args.drafter, prefix_cache=args.prefix_cache)
+                    drafter=args.drafter, prefix_cache=args.prefix_cache,
+                    max_preemptions=args.max_preemptions,
+                    audit_every=args.audit_every, chaos=chaos)
     if args.spec and not engine.spec_k:
         print(f"speculation requested but family {cfg.family!r} has no "
               "rewindable sequence dimension — plain decode fallback")
@@ -80,9 +120,20 @@ def main() -> None:
         engine.submit(Request(
             rid=rid,
             prompt=np.concatenate([system, user]).astype(np.int32),
-            max_new_tokens=args.max_new_tokens))
+            max_new_tokens=args.max_new_tokens,
+            priority=args.priority, deadline_s=args.deadline_s))
     done = engine.run()
+    if not done.drained:
+        print(f"NOT drained: truncated={done.truncated} "
+              f"stalled={done.stalled} in_flight={done.in_flight} "
+              f"queued={done.queued}")
     print("summary:", Engine.summarize(done))
+    r = engine.resilience_stats()
+    print(f"resilience: {r['preemptions']} preemptions "
+          f"(bound {r['max_preemptions']}/req), "
+          f"{r['deadline_misses']} deadline misses, "
+          f"{r['row_faults']} quarantined rows, {r['audits']} audits"
+          + (f", chaos={r['chaos']}" if chaos is not None else ""))
     print(f"scheduler: {engine.steps} ticks, {engine.dispatches} dispatches "
           f"(1 per tick, {engine.mixed_ticks} mixed), slot occupancy "
           f"{engine.slot_occupancy:.2f}")

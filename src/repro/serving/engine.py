@@ -112,6 +112,34 @@ dispatch instead:
   Sharing is exact: ``mixed_step`` is bitwise equal to sequential decode,
   so cached K/V is bit-identical to a recompute and token streams match the
   cache-OFF engine and ``reference_decode`` token for token.
+
+* **Resilience: lifecycle, preemption, fault quarantine.**  Every request
+  walks an explicit state machine — ``queued -> running -> {done, error,
+  cancelled, deadline_missed}`` (preemption loops a running request back to
+  ``queued``) — and pool pressure has a second answer beyond admission
+  stalls: with ``max_preemptions > 0``, a FIFO head that cannot reserve
+  (after LRU prefix eviction already ran) PREEMPTS the youngest /
+  lowest-priority running slot.  Preemption is lossless and cheap: the
+  victim's fully-written blocks are donated to the radix prefix cache
+  (prompt AND accepted output — so re-admission is mostly a page-table
+  copy), its accepted output is folded into its prompt, and it requeues
+  just behind the head; the slot layout falls back to plain
+  evict-and-recompute.  Each request is preempted at most
+  ``max_preemptions`` times, then becomes immune — so admission-triggered
+  eviction can never starve anyone.  ``deadline_s`` requests are swept
+  every tick (queued or running) once ``enforce_deadlines`` is on, and
+  ``cancel(rid)`` retires a request at any point in the lifecycle.  Faults
+  stay inside their row: non-finite logits (``check_finite``) and a
+  throwing ``sample`` hook quarantine ONLY the offending slot (terminal
+  ``status="error"``, blocks freed, allocator invariants intact) instead of
+  propagating out of the tick — and a poisoned row's blocks are never
+  donated to the prefix cache.  ``audit_every=N`` self-checks the
+  allocator partition, reservation invariant and page-table/ownership
+  coherence every N ticks; ``serving/chaos.py`` injects deterministic
+  faults (reservation denials, forced preemptions, NaN rows, garbage
+  drafts) against exactly these seams.  ``run()`` returns a ``RunResult``
+  (a list) whose ``truncated``/``in_flight``/``queued`` fields make a
+  ``max_steps`` budget hit explicit instead of silently dropping work.
 """
 
 from __future__ import annotations
@@ -119,6 +147,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -145,19 +174,56 @@ class _PrefixPlan:
     consumed: int
 
 
+# request lifecycle: queued -> running -> one terminal state (preemption
+# loops running back to queued; ``done`` stays True exactly on terminals)
+TERMINAL_STATES = ("done", "error", "cancelled", "deadline_missed")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray               # (len,) int32
     max_new_tokens: int = 32
     frames: np.ndarray | None = None  # (F, d) audio family only
+    priority: int = 0                # higher = admitted/kept first
+    deadline_s: float | None = None  # seconds after submit; None = no deadline
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
+    status: str = "queued"           # queued|running|done|error|cancelled|
+    #                                  deadline_missed
+    error: str | None = None         # quarantine reason when status=="error"
+    preemptions: int = 0             # times evicted-and-requeued (bounded)
+    folded: int = 0                  # output tokens already folded into
+    #                                  prompt by earlier preemptions
     submitted_at: float = 0.0
     first_token_at: float | None = None
     finished_at: float | None = None
     token_times: list = dataclasses.field(default_factory=list)
+
+
+class RunResult(list):
+    """``Engine.run``'s return value: the requests that reached a terminal
+    state during the call (a plain list, for compatibility), plus the drain
+    state — ``truncated`` is True when ``max_steps`` ran out with work still
+    queued or in flight (the budget hit is explicit, never silent),
+    ``stalled`` when the queue is non-empty but nothing could be admitted
+    and no row is live (permanent starvation signature: call again after
+    freeing resources)."""
+
+    def __init__(self, reqs=(), *, truncated: bool = False,
+                 in_flight: int = 0, queued: int = 0, stalled: bool = False):
+        super().__init__(reqs)
+        self.truncated = truncated
+        self.in_flight = in_flight
+        self.queued = queued
+        self.stalled = stalled
+
+    @property
+    def drained(self) -> bool:
+        """True when no work remains anywhere in the engine."""
+        return not (self.truncated or self.stalled or
+                    self.in_flight or self.queued)
 
 
 @dataclasses.dataclass
@@ -167,6 +233,8 @@ class _Slot:
     length: int = 0                  # TRUE tokens resident in this row
     pos: int = 0                     # prompt tokens consumed (chunk cursor)
     last_token: int = 0              # input token for the next decode step
+    seq: int = 0                     # admission order (preemption picks the
+    #                                  youngest = largest seq first)
 
     @property
     def prefilling(self) -> bool:
@@ -257,11 +325,19 @@ class Engine:
                  prefill_policy: str = "mixed",
                  spec_k: int = 0, drafter: Any = "plookup",
                  prefix_cache: bool = False,
+                 max_preemptions: int = 0,
+                 enforce_deadlines: bool = True,
+                 check_finite: bool = True,
+                 audit_every: int = 0,
+                 chaos: Any = None,
                  compile_cache: CompileCache | None = None):
         if prefill_policy not in ("mixed", "stall"):
             raise ValueError(f"unknown prefill_policy {prefill_policy!r}")
         if spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if max_preemptions < 0:
+            raise ValueError(
+                f"max_preemptions must be >= 0, got {max_preemptions}")
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
@@ -365,12 +441,38 @@ class Engine:
         self.dispatches = 0          # must equal steps: one dispatch per tick
         self.mixed_ticks = 0
         self._occupancy_sum = 0.0
+        # -- resilience layer (lifecycle, preemption, fault isolation) -------
+        # max_preemptions bounds how many times ONE request may be evicted
+        # and requeued (0 disables preemption — the seed's stall-only
+        # behavior); a request at the bound is immune, so progress is
+        # guaranteed.  enforce_deadlines sweeps deadline_s requests (queued
+        # or running) every tick; check_finite quarantines rows whose logits
+        # go non-finite; audit_every=N self-checks allocator/page-table
+        # invariants every N ticks; chaos is a serving.chaos.ChaosMonkey
+        # injecting deterministic faults at exactly these seams.
+        self.max_preemptions = max_preemptions
+        self.enforce_deadlines = enforce_deadlines
+        self.check_finite = check_finite
+        self.audit_every = audit_every
+        self.chaos = chaos
+        self.preemptions = 0         # total preempt-and-requeue events
+        self.deadline_misses = 0     # requests retired past their deadline
+        self.row_faults = 0          # rows quarantined (NaN logits / hook)
+        self.cancels = 0             # cancel() calls that found their target
+        self.audits = 0              # audit() passes run (all green)
+        self._admit_seq = 0          # monotonic admission counter (slot age)
+        self._live_rids: set = set() # queued + running rids (duplicate gate)
 
     # -- client API ----------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens} — a request always emits at least "
+                "its first token")
         if len(req.prompt) > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt length {len(req.prompt)} exceeds "
@@ -380,8 +482,36 @@ class Engine:
                 f"request {req.rid}: worst case needs "
                 f"{self._worst_case_blocks(req)} KV blocks but the pool has "
                 f"{self.pool_blocks} — raise kv_pool_blocks")
+        if req.rid in self._live_rids:
+            raise ValueError(
+                f"request {req.rid}: rid already queued or in flight — "
+                "rids must be unique among live requests")
+        req.status = "queued"
+        self._live_rids.add(req.rid)
         req.submitted_at = time.monotonic()
         self._queue.append(req)
+
+    def cancel(self, rid: int) -> bool:
+        """Retire request ``rid`` wherever it is in the lifecycle: dequeued
+        if still waiting, or freed mid-flight (slot + blocks released, the
+        partial output stays on the request).  Terminal ``status`` becomes
+        ``"cancelled"``.  Returns False when no live request has that rid
+        (already finished, or never submitted) — cancel is idempotent.
+        The request is retired HERE, not echoed through a later ``run()``
+        result: the caller already holds the object."""
+        for r in self._queue:
+            if r.rid == rid:
+                self._queue.remove(r)
+                self.cancels += 1
+                self._terminal(r, "cancelled")
+                return True
+        for i, s in enumerate(self._slots):
+            if s.req is not None and s.req.rid == rid:
+                self.cancels += 1
+                self._terminal(s.req, "cancelled")
+                self._free_slot(i)
+                return True
+        return False
 
     @property
     def compile_budget(self) -> int:
@@ -429,9 +559,13 @@ class Engine:
         return self.alloc.free
 
     def _worst_case_blocks(self, req: Request) -> int:
-        """Blocks the request can ever hold: its prompt plus full generation,
-        capped by the cache's addressable span (the ``_emit`` stop rules)."""
-        toks = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        """Blocks the request can ever hold: its prompt plus its REMAINING
+        generation (a preempted request's accepted output is folded into the
+        prompt, so only ``max_new_tokens - len(output)`` tokens are still
+        owed — but at least one: re-prefill always emits a token), capped by
+        the cache's addressable span (the ``_emit`` stop rules)."""
+        owed = max(req.max_new_tokens - len(req.output), 1)
+        toks = min(len(req.prompt) + owed, self.max_len)
         return -(-toks // self.block_size)
 
     def _prefix_plan(self, req: Request) -> _PrefixPlan | None:
@@ -567,10 +701,22 @@ class Engine:
 
     # -- internals -----------------------------------------------------------
 
-    def _finish(self, req: Request, completed: list[Request]) -> None:
+    def _terminal(self, req: Request, status: str,
+                  completed: list[Request] | None = None) -> None:
+        """Move ``req`` into terminal state ``status`` — the single exit
+        point of the lifecycle state machine, so every path (done, error,
+        cancelled, deadline_missed) stamps ``finished_at`` and releases the
+        rid for reuse exactly once."""
+        assert status in TERMINAL_STATES, status
+        req.status = status
         req.done = True
         req.finished_at = time.monotonic()
-        completed.append(req)
+        self._live_rids.discard(req.rid)
+        if completed is not None:
+            completed.append(req)
+
+    def _finish(self, req: Request, completed: list[Request]) -> None:
+        self._terminal(req, "done", completed)
 
     def _free_slot(self, idx: int) -> None:
         """Retire a row: release the host lease.  Device eviction is lazy —
@@ -624,6 +770,209 @@ class Engine:
                 except RuntimeError as e:
                     raise RuntimeError(f"{e} (rewind slot {idx})") from None
                 self._slot_reserve[idx] += 1
+
+    # -- resilience: quarantine, deadlines, preemption ----------------------
+
+    def _fault_row(self, idx: int, msg: str,
+                   completed: list[Request]) -> None:
+        """Quarantine exactly one row: the request finishes with
+        ``status="error"`` (partial output kept, ``error`` says why), its
+        slot and blocks are released through the normal ``_free_slot``
+        path, and every other row's tick proceeds untouched — a bad row
+        never propagates out of the batch."""
+        req = self._slots[idx].req
+        req.error = msg
+        self.row_faults += 1
+        self._terminal(req, "error", completed)
+        self._free_slot(idx)
+
+    def _safe_sample(self, idx: int, sample: Callable,
+                     logits_np: np.ndarray,
+                     completed: list[Request]) -> int | None:
+        """Run the user's ``sample`` hook for one row, quarantining the row
+        (not the tick) if the hook throws.  Returns None when faulted."""
+        try:
+            return int(sample(logits_np[idx]))
+        except Exception as e:  # noqa: BLE001 — hook code is untrusted
+            self._fault_row(idx, f"sample hook raised: {e!r}", completed)
+            return None
+
+    def _sweep_deadlines(self, completed: list[Request]) -> None:
+        """Retire every live request whose deadline has passed — queued
+        (never admitted) or mid-flight (slot freed, partial output kept).
+        ``deadline_s`` is measured from ``submitted_at``; ``>=`` makes
+        ``deadline_s=0.0`` miss deterministically at the first sweep."""
+        if not self.enforce_deadlines:
+            return
+        now = time.monotonic()
+
+        def missed(r: Request) -> bool:
+            return (r.deadline_s is not None and
+                    now - r.submitted_at >= r.deadline_s)
+
+        for i, s in enumerate(self._slots):
+            if s.req is not None and missed(s.req):
+                self.deadline_misses += 1
+                self._terminal(s.req, "deadline_missed", completed)
+                self._free_slot(i)
+        if any(missed(r) for r in self._queue):
+            keep: collections.deque = collections.deque()
+            for r in self._queue:
+                if missed(r):
+                    self.deadline_misses += 1
+                    self._terminal(r, "deadline_missed", completed)
+                else:
+                    keep.append(r)
+            self._queue = keep
+
+    def _pick_victim(self, max_priority: int | None = None, *,
+                     strict: bool = False) -> int | None:
+        """Choose the slot to preempt: lowest priority first, youngest
+        (largest admission ``seq``) within a priority.  Requests at their
+        preemption bound are immune (progress guarantee).  ``strict``
+        requires the victim's priority be LOWER than ``max_priority``
+        (priority preemption for a full batch); non-strict allows equal
+        (shortfall preemption — the FIFO head outranks a peer that has
+        already had its turn)."""
+        best: int | None = None
+        best_key: tuple[int, int] | None = None
+        for i, s in enumerate(self._slots):
+            r = s.req
+            if r is None or r.preemptions >= self.max_preemptions:
+                continue
+            if max_priority is not None:
+                if strict and r.priority >= max_priority:
+                    continue
+                if not strict and r.priority > max_priority:
+                    continue
+            key = (r.priority, -s.seq)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def _preempt(self, idx: int, *, requeue_front: bool = False) -> None:
+        """Evict a running request, keeping its work: accepted output folds
+        into the prompt (re-admission recomputes nothing semantically — the
+        folded run's token stream is bitwise the never-preempted one, since
+        emit-time lengths realign exactly), and under prefix sharing the
+        slot's fully written resident blocks (prompt + all but the newest
+        token) are donated to the radix cache first, so re-admission is
+        mostly a page-table copy via ``_prefix_plan``.  Requeued behind the
+        current head by default — the head caused the preemption and must
+        win the freed space — or at the front for a forced (chaos)
+        preemption with no waiting head."""
+        slot = self._slots[idx]
+        req = slot.req
+        if self.prefix is not None and slot.length >= self.block_size:
+            # prompt already holds output[:folded] from earlier folds —
+            # resident tokens are prompt + the output emitted SINCE
+            resident = np.concatenate([
+                np.asarray(req.prompt, np.int64),
+                np.asarray(req.output[req.folded:], np.int64)])[:slot.length]
+            nfull = slot.length // self.block_size
+            fresh = self.prefix.insert(resident[:nfull * self.block_size],
+                                       self._slot_blocks[idx][:nfull])
+            for blk in fresh:
+                self.alloc.incref(blk)
+        if len(req.output) > req.folded:
+            # fold only the output NOT already folded by an earlier
+            # preemption — re-folding would duplicate tokens in the prompt
+            req.prompt = np.concatenate([
+                np.asarray(req.prompt, np.int64),
+                np.asarray(req.output[req.folded:], np.int64)])
+            req.folded = len(req.output)
+        req.preemptions += 1
+        req.status = "queued"
+        self.preemptions += 1
+        self._free_slot(idx)
+        if requeue_front or not self._queue:
+            self._queue.appendleft(req)
+        else:
+            # behind the head that evicted it AND behind every waiter that
+            # outranks it — a preempted hog must not become the new head
+            # and block the higher-priority queue it was evicted for
+            pos = 1
+            while (pos < len(self._queue) and
+                   self._queue[pos].priority > req.priority):
+                pos += 1
+            self._queue.insert(pos, req)
+
+    def _admit_head(self, idx: int) -> bool:
+        """Try to admit the queue head into free slot ``idx``.  On a paged
+        reservation shortfall (after ``_can_reserve`` already ran LRU
+        prefix eviction), preempt victims one at a time — youngest/lowest
+        priority, never outranking the head — re-planning after each, until
+        the head fits or no victim remains (admission stall)."""
+        head = self._queue[0]
+        plan = self._prefix_plan(head)
+        if self.paged:
+            if self.chaos is not None and self.chaos.deny_reservation():
+                self.admission_stalls += 1
+                return False
+            while not self._can_reserve(head, plan):
+                v = self._pick_victim(head.priority, strict=False)
+                if v is None:
+                    self.admission_stalls += 1
+                    return False
+                self._preempt(v)
+                plan = self._prefix_plan(head)
+        self._admit(self._queue.popleft(), idx, plan)
+        return True
+
+    def audit(self) -> None:
+        """One-shot invariant audit (the ``audit_every`` knob runs it each
+        N ticks).  Raises AssertionError on the first violation: allocator
+        refcount/partition (``BlockAllocator.check``), deadlock-freedom
+        (``sum(reserve) <= free``), page-table rows exactly mirror the
+        slots' owned live blocks with a null tail, dead slots own nothing,
+        cache-held blocks are live, and every running rid is tracked."""
+        self.audits += 1
+        if self.paged:
+            self.alloc.check()
+            reserved = sum(self._slot_reserve)
+            assert reserved <= self.alloc.n_free, (
+                f"reservation invariant broken: {reserved} reserved > "
+                f"{self.alloc.n_free} free")
+            for i, s in enumerate(self._slots):
+                owned = self._slot_blocks[i]
+                if s.req is None:
+                    assert not owned and not self._slot_reserve[i], (
+                        f"dead slot {i} owns blocks/reservation")
+                row = self._page_table[i]
+                assert list(row[:len(owned)]) == owned, (
+                    f"slot {i} page table != owned blocks")
+                assert all(b == self._null_block
+                           for b in row[len(owned):]), (
+                    f"slot {i} page table has stale tail entries")
+                for blk in owned:
+                    assert self.alloc.ref(blk) >= 1, (
+                        f"slot {i} maps freed block {blk}")
+            if self.prefix is not None:
+                for blk in self.prefix.blocks():
+                    assert self.alloc.ref(blk) >= 1, (
+                        f"radix cache holds freed block {blk}")
+        for i, s in enumerate(self._slots):
+            if s.req is not None:
+                assert s.length <= self.max_len, f"slot {i} overran max_len"
+                assert s.req.rid in self._live_rids, (
+                    f"running rid {s.req.rid} untracked")
+
+    def resilience_stats(self) -> dict[str, Any]:
+        """Lifecycle/fault counters (chaos injection stats ride along when
+        a monkey is attached)."""
+        out: dict[str, Any] = {
+            "preemptions": self.preemptions,
+            "max_preemptions": self.max_preemptions,
+            "deadline_misses": self.deadline_misses,
+            "row_faults": self.row_faults,
+            "cancels": self.cancels,
+            "audits": self.audits,
+            "enforce_deadlines": self.enforce_deadlines,
+            "check_finite": self.check_finite,
+        }
+        if self.chaos is not None:
+            out["chaos"] = self.chaos.stats()
+        return out
 
     def _cow_block(self, idx: int, src: int) -> None:
         """Copy-on-write: lease a private block for slot ``idx``'s next page
@@ -690,7 +1039,9 @@ class Engine:
             insert = self.cache_compiles.get("insert", self.batch,
                                              self._build_insert)
             self.cache = insert(self.cache, row, np.int32(idx))
-        self._slots[idx] = _Slot(req=req)
+        self._admit_seq += 1
+        req.status = "running"
+        self._slots[idx] = _Slot(req=req, seq=self._admit_seq)
         if plan is not None:
             if plan.cow is not None:
                 self._cow_block(idx, plan.cow)
@@ -777,7 +1128,9 @@ class Engine:
         slot = self._slots[idx]
         req = slot.req
         now = time.monotonic()
-        if first:
+        if first and req.first_token_at is None:
+            # a preempted request keeps its ORIGINAL first-token time: the
+            # re-prefill's "first" token is really a later output token
             req.first_token_at = now
         req.output.append(token)
         req.token_times.append(now)
@@ -791,38 +1144,79 @@ class Engine:
             self._free_slot(idx)
 
     def run(self, *, max_steps: int = 10_000,
-            sample: Callable | None = None) -> list[Request]:
-        """Drain the queue; returns completed requests.
+            sample: Callable | None = None) -> "RunResult":
+        """Drain the queue; returns a ``RunResult`` (a list of the requests
+        that reached a terminal state this call — done, error, cancelled,
+        deadline_missed — plus truncation/stall flags).
 
-        Each tick: (1) refill free slots from the queue (a host-side lease
-        — no prefill dispatch), (2) co-schedule prompt chunks with decode
+        Each tick: (0) sweep deadlines and apply chaos, (1) refill free
+        slots from the queue (a host-side lease — no prefill dispatch),
+        preempting bounded victims on a reservation shortfall or for a
+        higher-priority head, (2) co-schedule prompt chunks with decode
         rows, (3) advance ALL slots with exactly one jitted call —
         ``mixed_step`` when any prompt chunk is in flight, the classic
-        ``decode_step`` otherwise.  ``sample`` maps a logits row (V,) to a
-        token id; greedy argmax (computed on device) when None.
+        ``decode_step`` otherwise — then quarantine any faulted row and
+        consume the rest.  ``sample`` maps a logits row (V,) to a token id;
+        greedy argmax (computed on device) when None.
         """
         completed: list[Request] = []
         start_steps = self.steps       # max_steps bounds THIS call, not the
-        while self.steps - start_steps < max_steps:  # engine's lifetime
+        stalled = False                # engine's lifetime
+        idle = 0                       # consecutive no-row no-admission ticks
+        while self.steps - start_steps < max_steps:
+            # 0. lifecycle sweeps: expired deadlines retire first (queued
+            # or mid-flight), then chaos may force-preempt a running row
+            self._sweep_deadlines(completed)
+            if self.chaos is not None and self.max_preemptions:
+                eligible = [i for i, s in enumerate(self._slots)
+                            if s.req is not None and
+                            s.req.preemptions < self.max_preemptions]
+                v = self.chaos.forced_preempt(eligible)
+                if v is not None:
+                    self._preempt(v, requeue_front=True)
             # 1. continuous refill: admit queued requests into free slots.
             # Paged: strict-FIFO admission gated on the worst-case block
-            # reservation — a held-back head request is an admission stall
+            # reservation — shortfalls preempt the youngest/lowest-priority
+            # bounded victim (when allowed), else stall the head
             for i in range(self.batch):
                 if self._slots[i].req is None and self._queue:
-                    plan = self._prefix_plan(self._queue[0])
-                    if self.paged and not self._can_reserve(self._queue[0],
-                                                            plan):
-                        self.admission_stalls += 1
+                    if not self._admit_head(i):
                         break
-                    self._admit(self._queue.popleft(), i, plan)
+            # priority preemption: a waiting head that OUTRANKS a running
+            # request does not sit behind it just because the batch is full
+            while (self._queue and self.max_preemptions and
+                   all(s.req is not None for s in self._slots)):
+                v = self._pick_victim(self._queue[0].priority, strict=True)
+                if v is None:
+                    break
+                self._preempt(v)
+                if not self._admit_head(v):
+                    break
             live = [i for i, s in enumerate(self._slots) if s.req is not None]
             if not live:
-                break  # queue drained (or fully stalled) and no row in flight
+                stalled = bool(self._queue)
+                if not stalled:
+                    break          # queue drained and no row in flight
+                # work is queued but nothing runs.  Without chaos this is
+                # permanent (submit bounds worst case by the pool, and with
+                # no live rows cache eviction can always free the rest) —
+                # under injection a denial is transient, so retry, bounded
+                # by max_steps idle ticks
+                idle += 1
+                if self.chaos is None or idle >= max_steps:
+                    break
+                continue
+            idle = 0
             chunks = self._schedule_chunks()
             stall = (self.prefill_policy == "stall" and any(chunks))
             decoding = [i for i in live
                         if not self._slots[i].prefilling and not stall]
             drafts = self._schedule_drafts(chunks, decoding, sample)
+            if self.chaos is not None and drafts:
+                # garbage drafts: same length (leases are sized by it), but
+                # possibly nonsense tokens — verify must reject losslessly
+                drafts = {i: self.chaos.garble_draft(d, self.cfg.vocab_size)
+                          for i, d in drafts.items()}
             if self.paged:
                 # on-demand leases for every row advancing this tick (the
                 # admission reservation guarantees these succeed — verify
@@ -907,11 +1301,31 @@ class Engine:
                     len(drafts.get(i, ()))
                     for i in live))
             next_np = np.asarray(next_tok)
-            logits_np = None if sample is None else np.asarray(logits)
+            logits_np = None
+            if (sample is not None or self.check_finite or
+                    self.chaos is not None):
+                logits_np = np.asarray(logits)
+            advancing = [i for i in live if chunks[i] or i in decoding]
+            bad: set[int] = set()
+            if self.chaos is not None and logits_np is not None:
+                hit = self.chaos.corrupt_rows(advancing)
+                if hit:
+                    logits_np = logits_np.copy()  # device arrays read-only
+                    for i in hit:
+                        logits_np[i] = np.nan
+            if self.check_finite and logits_np is not None:
+                bad = {i for i in advancing
+                       if not np.isfinite(logits_np[i]).all()}
 
-            # 3. consume: advance cursors, emit tokens, retire finished rows
+            # 3. consume: advance cursors, emit tokens, retire finished
+            # rows; faulted rows quarantine here, the rest are untouched
             for i in list(live):
                 slot = self._slots[i]
+                if slot.req is None:
+                    continue        # freed earlier this tick
+                if i in bad:
+                    self._fault_row(i, "non-finite logits", completed)
+                    continue
                 if chunks[i]:
                     slot.pos += chunks[i]
                     slot.length += chunks[i]
@@ -920,8 +1334,15 @@ class Engine:
                             # fully-written prompt blocks join the cache
                             self._cache_prompt(i)
                         # final chunk: this row's logits are its first token
-                        tok = (int(next_np[i]) if sample is None
-                               else int(sample(logits_np[i])))
+                        if sample is None:
+                            tok = int(next_np[i])
+                        else:
+                            tok = self._safe_sample(i, sample, logits_np,
+                                                    completed)
+                            if tok is None or self._slots[i].req is None:
+                                # hook threw (row quarantined) or cancelled
+                                # this very row mid-sample
+                                continue
                         self._emit(i, tok, completed, first=True)
                 elif i in drafts:
                     # verify row: accept the longest draft prefix agreeing
@@ -959,10 +1380,30 @@ class Engine:
                         self._rewind_slot(i, base + 1 + a)
                 elif i in decoding:
                     slot.length += 1
-                    tok = (int(next_np[i]) if sample is None
-                           else int(sample(logits_np[i])))
+                    if sample is None:
+                        tok = int(next_np[i])
+                    else:
+                        tok = self._safe_sample(i, sample, logits_np,
+                                                completed)
+                        if tok is None or self._slots[i].req is None:
+                            # hook threw (row quarantined) or cancelled
+                            # this very row mid-sample
+                            continue
                     self._emit(i, tok, completed, first=False)
-        return completed
+            if self.audit_every and self.steps % self.audit_every == 0:
+                self.audit()
+        in_flight = sum(s.req is not None for s in self._slots)
+        truncated = (self.steps - start_steps >= max_steps and
+                     bool(in_flight or self._queue))
+        if truncated:
+            warnings.warn(
+                f"Engine.run hit max_steps={max_steps} with {in_flight} "
+                f"request(s) in flight and {len(self._queue)} queued — "
+                "work is NOT drained; call run() again to continue",
+                RuntimeWarning, stacklevel=2)
+        return RunResult(completed, truncated=truncated,
+                         in_flight=in_flight, queued=len(self._queue),
+                         stalled=stalled)
 
     # -- metrics ---------------------------------------------------------------
 
@@ -1009,12 +1450,23 @@ class Engine:
         out = {
             "n": len(reqs),
             "total_tokens": float(sum(len(r.output) for r in reqs)),
-            "mean_ttft_s": float(np.mean(ttft)) if ttft else float("nan"),
-            "mean_tokens_per_s": float(np.mean(tps)) if tps else float("nan"),
+            # lifecycle outcome counts (ISSUE 8): empty buckets OMIT their
+            # mean_* keys below rather than emitting nan — nan poisons JSON
+            # diffs of BENCH_serving.json
+            "completed": sum(r.status == "done" for r in reqs),
+            "errors": sum(r.status == "error" for r in reqs),
+            "cancelled": sum(r.status == "cancelled" for r in reqs),
+            "deadline_missed": sum(r.status == "deadline_missed"
+                                   for r in reqs),
+            "preempted": sum(r.preemptions > 0 for r in reqs),
+            "preemptions": sum(r.preemptions for r in reqs),
         }
         if ttft:
+            out["mean_ttft_s"] = float(np.mean(ttft))
             out["ttft_p50_s"] = float(np.percentile(ttft, 50))
             out["ttft_p99_s"] = float(np.percentile(ttft, 99))
+        if tps:
+            out["mean_tokens_per_s"] = float(np.mean(tps))
         if itl:
             out["itl_p50_s"] = float(np.percentile(itl, 50))
             out["itl_p99_s"] = float(np.percentile(itl, 99))

@@ -24,10 +24,12 @@ import sys
 # the exact numbers only matter for balance, not correctness
 WEIGHTS = {
     "test_archs.py": 45,
+    "test_chaos.py": 11,
     "test_decode_kernel.py": 79,
     "test_distribution.py": 12,
     "test_ffn_fused.py": 42,
     "test_kernels.py": 45,
+    "test_lifecycle.py": 17,
     "test_mixed.py": 27,
     "test_paged_engine.py": 11,
     "test_paged_fuzz.py": 14,

@@ -1,0 +1,246 @@
+"""Chaos-harness tests (ISSUE 8): injector determinism, per-row fault
+quarantine (NaN logits and throwing sample hooks), garbage-draft
+losslessness, the audit()'s teeth, and a soak-cell subset (the full
+6-cell matrix runs as the CI chaos-soak step)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.compiler import CompileCache
+from repro.models import api
+from repro.serving.chaos import (ChaosConfig, ChaosMonkey, SOAK_CELLS,
+                                 run_soak_cell)
+from repro.serving.engine import Engine, Request, reference_decode
+
+_REF_CC = CompileCache()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
+                           kv_layout="paged", kv_block_size=8,
+                           kv_pool_blocks=24)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _reqs(cfg, rng, n, max_new=6):
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 17))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+# -- injector determinism ---------------------------------------------------
+
+def test_chaos_monkey_same_seed_same_faults():
+    a = ChaosMonkey(ChaosConfig(seed=7, deny_rate=0.3, preempt_rate=0.3,
+                                nan_rate=0.3, garbage_draft_rate=0.3))
+    b = ChaosMonkey(ChaosConfig(seed=7, deny_rate=0.3, preempt_rate=0.3,
+                                nan_rate=0.3, garbage_draft_rate=0.3))
+    trace_a, trace_b = [], []
+    for m, t in ((a, trace_a), (b, trace_b)):
+        for _ in range(50):
+            t.append(m.deny_reservation())
+            t.append(m.forced_preempt([0, 1, 2]))
+            t.append(tuple(m.corrupt_rows([0, 1, 2, 3])))
+            t.append(tuple(m.garble_draft([5, 6, 7], 256)))
+    assert trace_a == trace_b
+    assert a.stats() == b.stats()
+    c = ChaosMonkey(seed=8, deny_rate=0.3, preempt_rate=0.3,
+                    nan_rate=0.3, garbage_draft_rate=0.3)
+    assert [c.deny_reservation() for _ in range(50)] != trace_a[::4]
+
+
+def test_soak_cell_is_reproducible(setup):
+    """Same (cell, seed) → identical outcomes AND identical injected-fault
+    counters, end to end through a real engine."""
+    first = run_soak_cell("paged", "paged", "none", 0, False,
+                          seed=3, n_requests=6)
+    second = run_soak_cell("paged", "paged", "none", 0, False,
+                           seed=3, n_requests=6)
+    assert first == second
+
+
+def test_zero_rates_inject_nothing(setup):
+    """A ChaosMonkey with all-zero rates is a no-op: the run matches the
+    chaos-free engine bitwise and counts zero injections."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    reqs = _reqs(cfg, rng, 4)
+    oracle = {r.rid: reference_decode(cfg, params, r.prompt,
+                                      r.max_new_tokens, max_len=64,
+                                      compile_cache=_REF_CC)
+              for r in reqs}
+    monkey = ChaosMonkey(seed=0)
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 chaos=monkey, audit_every=1)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.status == "done" and r.output == oracle[r.rid]
+               for r in reqs)
+    assert all(v == 0 for v in monkey.injected.values())
+
+
+# -- per-row fault isolation ------------------------------------------------
+
+def test_nan_rate_one_quarantines_everything_pool_intact(setup):
+    """nan_rate=1.0: every advancing row faults at its first dispatch.
+    All requests end status="error" with empty output, and the pool comes
+    back fully free — quarantine leaks nothing."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    reqs = _reqs(cfg, rng, 5)
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 chaos=ChaosMonkey(seed=0, nan_rate=1.0), audit_every=1)
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert done.drained
+    assert all(r.status == "error" and r.error == "non-finite logits"
+               for r in reqs)
+    assert eng.row_faults == 5
+    assert eng.alloc.n_free == eng.pool_blocks      # nothing leaked
+    eng.audit()
+
+
+def test_nan_row_never_donated_to_prefix_cache(setup):
+    """A faulted row's blocks are freed, NOT donated: the prefix cache
+    must never serve KV pages that came from a quarantined row."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    reqs = _reqs(cfg, rng, 3)
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 prefix_cache=True,
+                 chaos=ChaosMonkey(seed=0, nan_rate=1.0), audit_every=1)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.status == "error" for r in reqs)
+    # faulted before any prompt completed → nothing was cacheable
+    assert not eng.prefix.blocks()
+    assert eng.alloc.n_free == eng.pool_blocks
+
+
+def test_sample_hook_exception_quarantines_only_that_row(setup):
+    """A throwing sample hook errors the row it fired on; the other
+    request still finishes bitwise equal to the oracle."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    a = Request(rid=0, prompt=rng.integers(0, 256, 6).astype(np.int32),
+                max_new_tokens=6)
+    b = Request(rid=1, prompt=rng.integers(0, 256, 6).astype(np.int32),
+                max_new_tokens=6)
+    ref_a = reference_decode(cfg, params, a.prompt, 6, max_len=64,
+                             compile_cache=_REF_CC)
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16,
+                 audit_every=1)
+    eng.submit(a)
+    eng.submit(b)
+
+    def sample(row):
+        if b.status == "running":       # batch_size=1: b's own row
+            raise RuntimeError("boom")
+        return int(np.argmax(row))
+
+    done = eng.run(sample=sample)
+    assert done.drained
+    assert a.status == "done" and a.output == ref_a
+    assert b.status == "error" and "boom" in b.error
+    assert eng.row_faults == 1
+    assert eng.alloc.n_free == eng.pool_blocks
+
+
+# -- garbage drafts ---------------------------------------------------------
+
+def test_garbage_drafts_are_lossless(setup):
+    """garbage_draft_rate=1.0: every draft is junk.  Greedy verification
+    rejects them; outputs stay bitwise the oracle's, at near-zero
+    acceptance."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    reqs = _reqs(cfg, rng, 4, max_new=8)
+    oracle = {r.rid: reference_decode(cfg, params, r.prompt, 8, max_len=64,
+                                      compile_cache=_REF_CC)
+              for r in reqs}
+    monkey = ChaosMonkey(seed=0, garbage_draft_rate=1.0)
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 spec_k=3, chaos=monkey, audit_every=1)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.status == "done" and r.output == oracle[r.rid]
+               for r in reqs)
+    assert monkey.injected["garbled_drafts"] > 0
+    # random junk over a 256-token vocab essentially never verifies
+    s = eng.spec_stats()
+    assert s["acceptance_rate"] < 0.25
+
+
+# -- deadline storm ---------------------------------------------------------
+
+def test_deadline_storm_kills_only_deadlined_rows(setup):
+    """Half the workload carries deadline_s=0.0 (guaranteed storm): those
+    rows all miss; the rest drain bitwise-correct."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    reqs = _reqs(cfg, rng, 6)
+    oracle = {r.rid: reference_decode(cfg, params, r.prompt,
+                                      r.max_new_tokens, max_len=64,
+                                      compile_cache=_REF_CC)
+              for r in reqs}
+    for r in reqs:
+        if r.rid % 2:
+            r.deadline_s = 0.0
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 audit_every=1)
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        if r.rid % 2:
+            assert r.status == "deadline_missed"
+        else:
+            assert r.status == "done" and r.output == oracle[r.rid]
+    assert eng.deadline_misses == 3
+    assert eng.alloc.n_free == eng.pool_blocks
+
+
+# -- the audit has teeth ----------------------------------------------------
+
+def test_audit_catches_corrupted_state(setup):
+    """audit() must FAIL on a genuinely corrupt engine — otherwise the
+    soak's per-tick green audits prove nothing."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16)
+    eng.submit(Request(rid=0, prompt=rng.integers(0, 256, 8)
+                       .astype(np.int32), max_new_tokens=4))
+    eng.run()
+    eng.audit()                         # clean after drain
+    eng._slot_reserve[0] = eng.pool_blocks + 1   # over-reservation
+    with pytest.raises(AssertionError):
+        eng.audit()
+    eng._slot_reserve[0] = 0
+    eng.audit()
+    eng._slot_blocks[0] = [0]           # dead slot claiming a block
+    with pytest.raises(AssertionError):
+        eng.audit()
+    eng._slot_blocks[0] = []
+    eng.audit()
+
+
+# -- soak subset (full matrix = CI chaos-soak step) -------------------------
+
+@pytest.mark.parametrize("cell", [SOAK_CELLS[0], SOAK_CELLS[-1]],
+                         ids=lambda c: c[0])
+def test_soak_cell_subset(cell):
+    stats = run_soak_cell(*cell, seed=0, n_requests=8)
+    outcomes = stats["outcomes"]
+    assert sum(outcomes.values()) == 8
+    assert outcomes.get("done", 0) >= 1     # chaos didn't kill everything

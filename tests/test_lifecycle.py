@@ -1,0 +1,349 @@
+"""Request-lifecycle tests (ISSUE 8): submit/admission edge cases, cancel
+at every stage, deterministic deadline misses, explicit run() truncation,
+and lossless bounded preemption under pool pressure and priorities."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.compiler import CompileCache, quantize_model
+from repro.models import api
+from repro.serving.engine import (Engine, Request, RunResult,
+                                  TERMINAL_STATES, reference_decode)
+
+# one oracle cache PER CONFIG — executables close over cfg, so sharing a
+# cache across the slot and paged fixtures would replay the wrong shapes
+_REF_CC = CompileCache()
+_REF_CC_PAGED = CompileCache()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen-7b", d_model=128, d_ff=256, vocab_size=512)
+    params = quantize_model(
+        api.init_params(cfg, jax.random.PRNGKey(0)), "dense")
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def paged_setup():
+    cfg = get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
+                           kv_layout="paged", kv_block_size=8,
+                           kv_pool_blocks=6)
+    params = api.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engine(setup):
+    cfg, params = setup
+    return Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16)
+
+
+def _prompt(rng, n, vocab=512):
+    return rng.integers(0, vocab, n).astype(np.int32)
+
+
+def _run_some(eng, n, **kw):
+    """run(max_steps=n) where truncation is the POINT — swallow the
+    (expected) not-drained warning."""
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", RuntimeWarning)
+        return eng.run(max_steps=n, **kw)
+
+
+# -- submit / admission edge cases ----------------------------------------
+
+def test_prompt_exactly_max_len_admits(setup):
+    """len(prompt) == max_len is admissible: the request emits exactly one
+    token (the cache is full after prefill) and matches the oracle."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=2, max_len=32, chunk_size=16)
+    rng = np.random.default_rng(0)
+    prompt = _prompt(rng, 32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8))
+    done = eng.run()
+    assert done[0].status == "done" and len(done[0].output) == 1
+    assert done[0].output == reference_decode(
+        cfg, params, prompt, 8, max_len=32, compile_cache=_REF_CC)
+
+
+def test_max_new_tokens_zero_rejected(engine):
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        engine.submit(Request(rid=900, prompt=np.zeros(4, np.int32),
+                              max_new_tokens=0))
+
+
+def test_duplicate_rid_rejected_while_live(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16)
+    rng = np.random.default_rng(1)
+    eng.submit(Request(rid=7, prompt=_prompt(rng, 4), max_new_tokens=2))
+    with pytest.raises(ValueError, match="rid already queued"):
+        eng.submit(Request(rid=7, prompt=_prompt(rng, 4), max_new_tokens=2))
+    eng.run()
+    # the rid is free again once its first holder reached a terminal state
+    eng.submit(Request(rid=7, prompt=_prompt(rng, 4), max_new_tokens=2))
+    assert eng.run()[0].status == "done"
+
+
+# -- cancel at every lifecycle stage --------------------------------------
+
+def test_cancel_before_admit(setup):
+    """A queued request cancels without ever touching a slot; the rest of
+    the queue is unaffected and still matches the oracle."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16)
+    rng = np.random.default_rng(2)
+    keep = Request(rid=0, prompt=_prompt(rng, 5), max_new_tokens=3)
+    doomed = Request(rid=1, prompt=_prompt(rng, 5), max_new_tokens=3)
+    eng.submit(keep)
+    eng.submit(doomed)
+    assert eng.cancel(1) is True
+    assert doomed.status == "cancelled" and doomed.done
+    assert doomed.output == [] and doomed.finished_at is not None
+    done = eng.run()
+    assert [r.rid for r in done] == [0]
+    assert keep.output == reference_decode(cfg, params, keep.prompt, 3,
+                                           max_len=64, compile_cache=_REF_CC)
+
+
+def test_cancel_unknown_rid_is_false(engine):
+    assert engine.cancel(12345) is False
+
+
+def test_cancel_mid_flight_frees_row_and_spares_neighbors(setup):
+    """Cancelling a RUNNING request (from inside a sample hook, mid-tick)
+    frees only its slot; the surviving row's stream is still bitwise the
+    oracle's."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16)
+    rng = np.random.default_rng(3)
+    a = Request(rid=0, prompt=_prompt(rng, 6), max_new_tokens=8)
+    b = Request(rid=1, prompt=_prompt(rng, 6), max_new_tokens=8)
+    eng.submit(a)
+    eng.submit(b)
+    fired = []
+
+    def sample(row):
+        if len(a.output) == 2 and not fired:
+            fired.append(eng.cancel(1))
+        return int(np.argmax(row))
+
+    done = eng.run(sample=sample)
+    assert fired == [True]
+    assert b.status == "cancelled" and len(b.output) < 8
+    assert a.status == "done"
+    assert a.output == reference_decode(cfg, params, a.prompt, 8,
+                                        max_len=64, compile_cache=_REF_CC)
+    # cancel() retires the request at the call site — it is not echoed
+    # through run()'s result (the caller already holds the object)
+    assert {r.rid for r in done} == {0}
+    # cancelled slot was reusable afterwards
+    assert eng._slots[0].req is None and eng._slots[1].req is None
+
+
+# -- deadlines -------------------------------------------------------------
+
+def test_deadline_zero_misses_deterministically(setup):
+    """deadline_s=0.0 expires at the FIRST sweep — deterministic in CI —
+    whether the request is still queued or already running; neighbors
+    without deadlines are untouched."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16)
+    rng = np.random.default_rng(4)
+    doomed = Request(rid=0, prompt=_prompt(rng, 5), max_new_tokens=4,
+                     deadline_s=0.0)
+    queued_doomed = Request(rid=1, prompt=_prompt(rng, 5), max_new_tokens=4,
+                            deadline_s=0.0)
+    survivor = Request(rid=2, prompt=_prompt(rng, 5), max_new_tokens=4)
+    for r in (doomed, queued_doomed, survivor):
+        eng.submit(r)
+    done = eng.run()
+    assert doomed.status == "deadline_missed" and doomed.output == []
+    assert queued_doomed.status == "deadline_missed"
+    assert survivor.status == "done" and len(survivor.output) == 4
+    assert eng.deadline_misses == 2
+    assert {r.rid for r in done} == {0, 1, 2}
+
+
+def test_deadlines_not_enforced_when_disabled(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16,
+                 enforce_deadlines=False)
+    rng = np.random.default_rng(5)
+    r = Request(rid=0, prompt=_prompt(rng, 5), max_new_tokens=3,
+                deadline_s=0.0)
+    eng.submit(r)
+    eng.run()
+    assert r.status == "done" and eng.deadline_misses == 0
+
+
+# -- run() truncation is explicit ------------------------------------------
+
+def test_run_truncation_is_explicit(setup):
+    """max_steps exhaustion with work in flight returns truncated=True (and
+    warns) instead of silently dropping it; draining later flips every
+    flag back off."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16)
+    rng = np.random.default_rng(6)
+    eng.submit(Request(rid=0, prompt=_prompt(rng, 5), max_new_tokens=8))
+    eng.submit(Request(rid=1, prompt=_prompt(rng, 5), max_new_tokens=8))
+    with pytest.warns(RuntimeWarning, match="NOT drained"):
+        part = eng.run(max_steps=2)
+    assert isinstance(part, RunResult)
+    assert part.truncated and not part.drained
+    assert part.in_flight == 1 and part.queued == 1
+    assert part == []                     # still a list (compat)
+    rest = eng.run()
+    assert rest.drained and not rest.truncated
+    assert rest.in_flight == 0 and rest.queued == 0 and not rest.stalled
+    assert {r.rid for r in rest} == {0, 1}
+
+
+def test_run_drained_has_no_warning(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16)
+    rng = np.random.default_rng(7)
+    eng.submit(Request(rid=0, prompt=_prompt(rng, 4), max_new_tokens=2))
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", RuntimeWarning)
+        res = eng.run()
+    assert res.drained
+
+
+# -- preemption -------------------------------------------------------------
+
+def _preempt_pressure_run(cfg, params, *, prefix_cache: bool):
+    """A hog mid-generation is preempted by a head it cannot share the pool
+    with; both must finish bitwise equal to their never-preempted runs."""
+    eng = Engine(cfg, params, batch_size=2, max_len=48, chunk_size=16,
+                 prefix_cache=prefix_cache, max_preemptions=2,
+                 audit_every=1)
+    rng = np.random.default_rng(8)
+    hog_prompt = _prompt(rng, 8, cfg.vocab_size)
+    head_prompt = _prompt(rng, 16, cfg.vocab_size)
+    oracle = {
+        0: reference_decode(cfg, params, hog_prompt, 24, max_len=48,
+                            compile_cache=_REF_CC_PAGED),
+        1: reference_decode(cfg, params, head_prompt, 16, max_len=48,
+                            compile_cache=_REF_CC_PAGED),
+    }
+    hog = Request(rid=0, prompt=hog_prompt, max_new_tokens=24)
+    eng.submit(hog)
+    _run_some(eng, 6)                     # hog emits a few tokens first
+    assert 0 < len(hog.output) < 24
+    head = Request(rid=1, prompt=head_prompt, max_new_tokens=16)
+    eng.submit(head)                      # pool (6 blocks) can't hold both
+    done = eng.run()
+    assert done.drained
+    assert eng.preemptions >= 1 and hog.preemptions >= 1
+    assert hog.preemptions <= 2 and head.preemptions <= 2
+    assert hog.status == head.status == "done"
+    assert hog.output == oracle[0], "preempted request diverged from its " \
+                                    "never-preempted stream"
+    assert head.output == oracle[1]
+    assert hog.first_token_at is not None
+    eng.audit()
+    return eng
+
+
+def test_preemption_lossless_paged_with_prefix_donation(paged_setup):
+    cfg, params = paged_setup
+    eng = _preempt_pressure_run(cfg, params, prefix_cache=True)
+    assert eng.prefix is not None         # donation path was live
+
+
+def test_preemption_lossless_paged_plain_recompute(paged_setup):
+    cfg, params = paged_setup
+    eng = _preempt_pressure_run(cfg, params, prefix_cache=False)
+    assert eng.prefix is None             # fell back to full recompute
+
+
+def test_preemption_disabled_by_default(paged_setup):
+    """max_preemptions=0 (the default) preserves the old stall-only
+    admission: pool pressure stalls the head, nothing is evicted."""
+    cfg, params = paged_setup
+    eng = Engine(cfg, params, batch_size=2, max_len=48, chunk_size=16)
+    rng = np.random.default_rng(9)
+    reqs = [Request(rid=i, prompt=_prompt(rng, 8, cfg.vocab_size),
+                    max_new_tokens=24) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert done.drained and eng.preemptions == 0
+    assert eng.admission_stalls > 0       # pressure showed up as stalls
+    assert all(r.status == "done" for r in reqs)
+
+
+def test_priority_preemption_on_slot_layout(setup):
+    """A higher-priority head evicts a lower-priority running request even
+    on the non-paged layout (no pool: plain evict-and-recompute), and the
+    victim still finishes bitwise-lossless."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16,
+                 max_preemptions=1)
+    rng = np.random.default_rng(10)
+    low_prompt = _prompt(rng, 6)
+    low = Request(rid=0, prompt=low_prompt, max_new_tokens=20, priority=0)
+    eng.submit(low)
+    _run_some(eng, 4)
+    assert 0 < len(low.output) < 20
+    high = Request(rid=1, prompt=_prompt(rng, 6), max_new_tokens=3,
+                   priority=1)
+    eng.submit(high)
+    done = eng.run()
+    assert done.drained
+    assert low.preemptions == 1 and eng.preemptions == 1
+    # the high-priority request went FIRST despite arriving mid-flight
+    assert high.finished_at < low.finished_at
+    assert low.output == reference_decode(cfg, params, low_prompt, 20,
+                                          max_len=64, compile_cache=_REF_CC)
+
+
+def test_equal_priority_is_not_preempted_when_batch_full(setup):
+    """Priority preemption is strict: an equal-priority head waits for a
+    free slot instead of thrashing a peer."""
+    cfg, params = setup
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16,
+                 max_preemptions=2)
+    rng = np.random.default_rng(11)
+    a = Request(rid=0, prompt=_prompt(rng, 5), max_new_tokens=6)
+    b = Request(rid=1, prompt=_prompt(rng, 5), max_new_tokens=6)
+    eng.submit(a)
+    _run_some(eng, 2)
+    eng.submit(b)
+    eng.run()
+    assert eng.preemptions == 0
+    assert a.status == b.status == "done"
+
+
+# -- summarize lifecycle counts --------------------------------------------
+
+def test_summarize_omits_empty_buckets_and_counts_outcomes():
+    r_done = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=3)
+    r_done.status = "done"
+    r_done.output = [1, 2]
+    r_err = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=3)
+    r_err.status = "error"
+    r_err.preemptions = 2
+    r_miss = Request(rid=2, prompt=np.zeros(4, np.int32), max_new_tokens=3)
+    r_miss.status = "deadline_missed"
+    s = Engine.summarize([r_done, r_err, r_miss])
+    # no request ever produced a first token: the mean keys are OMITTED,
+    # never emitted as nan (nan poisons BENCH_serving.json diffs)
+    assert "mean_ttft_s" not in s and "mean_tokens_per_s" not in s
+    assert s["completed"] == 1 and s["errors"] == 1
+    assert s["deadline_missed"] == 1 and s["cancelled"] == 0
+    assert s["preempted"] == 1 and s["preemptions"] == 2
+    assert all(not (isinstance(v, float) and np.isnan(v))
+               for v in s.values())
+
+
+def test_terminal_states_registry():
+    assert set(TERMINAL_STATES) == {"done", "error", "cancelled",
+                                    "deadline_missed"}
