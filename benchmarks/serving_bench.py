@@ -611,6 +611,115 @@ def run_overload(cfg, params, *, batch: int = 4, max_len: int = 128,
 
 
 # ---------------------------------------------------------------------------
+# restart mode (snapshot cost, recovery latency, warm vs cold TTFT)
+# ---------------------------------------------------------------------------
+
+def _probe_ttft(engine, rid: int, prompt, max_new: int = 4) -> tuple:
+    """Submit ONE probe request into an idle engine and run it to completion;
+    returns (ttft_seconds, output tokens)."""
+    req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new)
+    engine.submit(req)
+    engine.run()
+    return req.first_token_at - req.submitted_at, [int(t) for t in req.output]
+
+
+def run_restart(cfg, params, *, batch: int = 4, max_len: int = 96,
+                block_size: int = 8, system_len: int = 48,
+                n_requests: int = 10, max_new: int = 8,
+                save_repeats: int = 3) -> dict:
+    """Durability cost/benefit: snapshot save time, ``Engine.restore``
+    latency, and what the restored state buys — warm-restore TTFT (prefix
+    cache + executables back) vs cold-start TTFT (same process, empty
+    cache) on an identical probe prompt.
+
+    All engines share ONE compile cache, so every TTFT delta isolates
+    STATE (the radix prefix cache restored from the snapshot) rather than
+    re-jit — the cost a cold process actually pays twice.  Probe prompts
+    share the workload's system prompt with a fresh user turn, so each
+    probe hits exactly the system-prefix chain (never a previous probe's).
+    The restored and cold probes use the SAME prompt and must emit the
+    same greedy tokens (``outputs_match``)."""
+    import dataclasses
+    import os
+    import shutil
+    import tempfile
+
+    worst = -(-(system_len + 12 + max_new) // block_size)
+    pool_blocks = 2 * worst + 6
+    cfg_paged = dataclasses.replace(cfg, kv_layout="paged",
+                                    kv_block_size=block_size,
+                                    kv_pool_blocks=pool_blocks)
+    workload = _prefix_workload(cfg_paged, n_requests=n_requests,
+                                system_len=system_len, max_new=max_new)
+    system = workload[0].prompt[:system_len]
+    rng = np.random.default_rng(11)
+    probe_x = np.concatenate(
+        [system, rng.integers(0, cfg.vocab_size, 8)]).astype(np.int32)
+    probe_y = np.concatenate(
+        [system, rng.integers(0, cfg.vocab_size, 8)]).astype(np.int32)
+    kw = dict(batch_size=batch, max_len=max_len, chunk_size=8,
+              prefix_cache=True)
+
+    # warm pass: compile the executable set every later engine reuses
+    warm = Engine(cfg_paged, params, **kw)
+    for r in workload:
+        warm.submit(Request(rid=r.rid, prompt=r.prompt,
+                            max_new_tokens=r.max_new_tokens))
+    warm.run()
+    _probe_ttft(warm, 9000, probe_x)
+    cc = warm.cache_compiles
+
+    # live engine: serve the workload, measure the warm cached-prefix TTFT,
+    # then snapshot (save_repeats times for a median save cost)
+    workdir = tempfile.mkdtemp(prefix="bench_restart_")
+    engine = Engine(cfg_paged, params, compile_cache=cc,
+                    snapshot_dir=workdir, snapshot_every=0, **kw)
+    for r in workload:
+        engine.submit(Request(rid=r.rid, prompt=r.prompt,
+                              max_new_tokens=r.max_new_tokens))
+    engine.run()
+    prekill_ttft, _ = _probe_ttft(engine, 9001, probe_x)
+    saves = []
+    for _ in range(save_repeats):
+        t0 = time.perf_counter()
+        engine.snapshot()
+        saves.append(time.perf_counter() - t0)
+    from repro.serving import snapshot as snaplib
+    _, snapdir = snaplib.latest_snapshot(workdir)
+    snap_bytes = sum(os.path.getsize(os.path.join(dp, f))
+                     for dp, _, fs in os.walk(snapdir) for f in fs)
+
+    # the process "dies" here: the live engine is abandoned unflushed and a
+    # fresh one recovers everything from disk
+    t0 = time.perf_counter()
+    restored = Engine.restore(workdir, params, compile_cache=cc)
+    restore_s = time.perf_counter() - t0
+    restored_ttft, out_restored = _probe_ttft(restored, 9002, probe_y)
+
+    # cold start: same executables, but no durable state — the probe pays
+    # the full system-prompt prefill again
+    cold = Engine(cfg_paged, params, compile_cache=cc, **kw)
+    cold_ttft, out_cold = _probe_ttft(cold, 9003, probe_y)
+
+    shutil.rmtree(workdir, ignore_errors=True)
+    return {
+        "config": {"arch": cfg.name, "batch": batch, "max_len": max_len,
+                   "block_size": block_size, "system_len": system_len,
+                   "n_requests": n_requests, "pool_blocks": pool_blocks},
+        "snapshot_save_ms": float(np.median(saves) * 1e3),
+        "snapshot_bytes": snap_bytes,
+        "restore_ms": restore_s * 1e3,
+        "prekill_cached_ttft_ms": prekill_ttft * 1e3,
+        "restored_ttft_ms": restored_ttft * 1e3,
+        "cold_ttft_ms": cold_ttft * 1e3,
+        "warm_restore_ttft_speedup": cold_ttft / max(restored_ttft, 1e-9),
+        "restored_vs_prekill": restored_ttft / max(prekill_ttft, 1e-9),
+        "outputs_match": out_restored == out_cold,
+        "restored_prefix_hit_tokens": restored.prefix_hit_tokens,
+    }
+
+
+# ---------------------------------------------------------------------------
 # drivers
 # ---------------------------------------------------------------------------
 
@@ -667,6 +776,13 @@ def rows() -> list[tuple[str, float, str]]:
          f"miss={ovl['resilient']['deadline_miss_rate']:.2f}"
          f"<-{ovl['stall_baseline']['deadline_miss_rate']:.2f} "
          f"preempt={ovl['resilient']['preemptions']}"))
+    rst = run_restart(cfg, params, n_requests=8)
+    out.append(
+        ("serving/restore_us", rst["restore_ms"] * 1e3,
+         f"save={rst['snapshot_save_ms']:.1f}ms "
+         f"warm_ttft={rst['restored_ttft_ms']:.1f}ms "
+         f"vs_cold={rst['warm_restore_ttft_speedup']:.2f}x "
+         f"match={rst['outputs_match']}"))
     return out
 
 
@@ -695,6 +811,9 @@ def run_smoke(path: str = "BENCH_serving.json") -> dict:
     # overload cut: past-capacity workload, stall-only baseline vs bounded
     # preemption + deadline enforcement (goodput must strictly dominate)
     record["overload"] = run_overload(cfg, params)
+    # restart cut: snapshot save cost, Engine.restore latency, and the
+    # warm-restore vs cold-start TTFT gap the durable prefix cache buys
+    record["restart"] = run_restart(cfg, params)
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
     print(json.dumps(record, indent=2, sort_keys=True))
@@ -705,7 +824,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="mixed",
                     choices=["mixed", "throughput", "spec", "prefix",
-                             "overload"])
+                             "overload", "restart"])
     ap.add_argument("--arch", default="qwen-7b")
     ap.add_argument("--batches", default="1,2,4,8")
     ap.add_argument("--queue-depths", default="8,16")
@@ -786,6 +905,28 @@ def main() -> None:
                   f"{r['admission_stalls']:>7} {r['steps']:>6}")
         print(f"preemption+deadlines: {rec['goodput_gain']:.2f}x goodput, "
               f"miss rate -{rec['miss_rate_drop']:.2f} vs stall-only")
+        return
+
+    if args.mode == "restart":
+        rec = run_restart(cfg, params, max_len=args.max_len)
+        c = rec["config"]
+        print(f"arch={cfg.name} {c['n_requests']} requests, system prompt "
+              f"{c['system_len']} tokens, pool={c['pool_blocks']} blocks "
+              f"(snapshot={rec['snapshot_bytes'] / 1024:.0f} KiB)")
+        print(f"snapshot save      {rec['snapshot_save_ms']:>8.1f} ms "
+              f"(median of 3, atomic)")
+        print(f"Engine.restore     {rec['restore_ms']:>8.1f} ms "
+              f"(device state + host replay + warm executables)")
+        print(f"TTFT  pre-kill     {rec['prekill_cached_ttft_ms']:>8.1f} ms "
+              f"(cached prefix, live engine)")
+        print(f"TTFT  warm restore {rec['restored_ttft_ms']:>8.1f} ms "
+              f"({rec['restored_vs_prekill']:.2f}x pre-kill; prefix cache "
+              f"survived the crash)")
+        print(f"TTFT  cold start   {rec['cold_ttft_ms']:>8.1f} ms "
+              f"(no durable state)")
+        print(f"warm restore beats cold start "
+              f"{rec['warm_restore_ttft_speedup']:.2f}x on TTFT "
+              f"(outputs_match={rec['outputs_match']})")
         return
 
     if args.mode == "spec":

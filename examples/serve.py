@@ -15,10 +15,16 @@ deterministic faults (reservation denials, forced preemptions, NaN rows)
 and watch the lifecycle absorb them: faulted rows finish
 ``status="error"``, preempted requests requeue losslessly (bounded by
 ``--max-preemptions``), ``--deadline-s`` expires laggards, and everything
-else still matches the batch-1 oracle bitwise.
+else still matches the batch-1 oracle bitwise.  Pass ``--snapshot-dir``
+to make the run crash-safe: atomic engine snapshots plus a write-ahead
+request journal, so a killed process restarts with ``--restore`` and
+finishes every request with the exact tokens it would have emitted
+uninterrupted.
 
 Run:  PYTHONPATH=src python examples/serve.py [--spec] [--prefix-cache]
       PYTHONPATH=src python examples/serve.py --chaos --max-preemptions 2
+      PYTHONPATH=src python examples/serve.py --snapshot-dir /tmp/snap
+      PYTHONPATH=src python examples/serve.py --snapshot-dir /tmp/snap --restore
 """
 
 import argparse
@@ -50,7 +56,18 @@ def main() -> None:
                          "(0 = stall-only admission)")
     ap.add_argument("--chaos", action="store_true",
                     help="seeded fault injection (repro.serving.chaos)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="atomic engine snapshots + write-ahead request "
+                         "journal under this dir (crash-safe serving)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="snapshot cadence in ticks (with --snapshot-dir)")
+    ap.add_argument("--restore", action="store_true",
+                    help="recover from --snapshot-dir instead of starting "
+                         "fresh; the journal replays anything the last "
+                         "snapshot missed and in-flight requests resume")
     args = ap.parse_args()
+    if args.restore and not args.snapshot_dir:
+        ap.error("--restore requires --snapshot-dir")
 
     kv = (dict(kv_layout="paged", kv_block_size=16)
           if args.prefix_cache else {})
@@ -64,20 +81,28 @@ def main() -> None:
         from repro.serving.chaos import ChaosConfig, ChaosMonkey
         chaos = ChaosMonkey(ChaosConfig(seed=0, deny_rate=0.05,
                                         preempt_rate=0.1, nan_rate=0.02))
-    engine = Engine(cfg, qparams, batch_size=4, max_len=128,
-                    spec_k=args.spec_k if args.spec else 0,
-                    drafter=args.drafter, prefix_cache=args.prefix_cache,
-                    max_preemptions=args.max_preemptions, chaos=chaos)
-    rng = np.random.default_rng(0)
-    system = (rng.integers(0, cfg.vocab_size, 32)
-              if args.prefix_cache else rng.integers(0, cfg.vocab_size, 0))
-    for rid in range(8):
-        user = rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
-        engine.submit(Request(rid=rid,
-                              prompt=np.concatenate(
-                                  [system, user]).astype(np.int32),
-                              max_new_tokens=16,
-                              deadline_s=args.deadline_s))
+    if args.restore:
+        engine = Engine.restore(args.snapshot_dir, qparams, chaos=chaos)
+        print(f"restored from {args.snapshot_dir}:",
+              engine.durability_stats())
+    else:
+        engine = Engine(cfg, qparams, batch_size=4, max_len=128,
+                        spec_k=args.spec_k if args.spec else 0,
+                        drafter=args.drafter,
+                        prefix_cache=args.prefix_cache,
+                        max_preemptions=args.max_preemptions, chaos=chaos,
+                        snapshot_dir=args.snapshot_dir,
+                        snapshot_every=args.snapshot_every)
+        rng = np.random.default_rng(0)
+        system = (rng.integers(0, cfg.vocab_size, 32)
+                  if args.prefix_cache else rng.integers(0, cfg.vocab_size, 0))
+        for rid in range(8):
+            user = rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
+            engine.submit(Request(rid=rid,
+                                  prompt=np.concatenate(
+                                      [system, user]).astype(np.int32),
+                                  max_new_tokens=16,
+                                  deadline_s=args.deadline_s))
 
     done = engine.run()
     for r in sorted(done, key=lambda r: r.rid):
@@ -87,6 +112,8 @@ def main() -> None:
     print("summary:", Engine.summarize(done))
     if chaos is not None or args.max_preemptions or args.deadline_s:
         print("resilience:", engine.resilience_stats())
+    if args.snapshot_dir:
+        print("durability:", engine.durability_stats())
     print(f"scheduler: {engine.steps} batched ticks "
           f"({engine.dispatches} dispatches, {engine.mixed_ticks} mixed), "
           f"slot occupancy {engine.slot_occupancy:.2f}")

@@ -1,0 +1,57 @@
+"""Atomic directory writes: the temp-then-``os.replace`` pattern, shared.
+
+Both the training checkpointer (``train/checkpoint.py``) and the serving
+snapshot store (``serving/snapshot.py``) need the same crash-consistency
+guarantee: a directory either appears fully written or not at all, and a
+process killed mid-write leaves only a ``<dir>.tmp`` turd that the next
+writer clears.  One implementation, used by both.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import shutil
+from typing import Iterator
+
+
+@contextlib.contextmanager
+def atomic_dir(final: str) -> Iterator[str]:
+    """Yield a scratch directory; on clean exit, ``os.replace`` it to ``final``.
+
+    The scratch dir is ``<final>.tmp`` — a stale one from a previous killed
+    writer is removed first.  On exception the scratch dir is removed and the
+    exception propagates; ``final`` is never observed half-written.  If
+    ``final`` already exists it is replaced atomically-enough for our single
+    writer: the old dir is removed just before the rename (readers pick
+    snapshots by scanning for *complete* dirs, so the narrow window where
+    ``final`` is absent is already handled by fallback-to-previous).
+    """
+    final = os.fspath(final)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    try:
+        yield tmp
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _fsync_dir(os.path.dirname(final) or ".")
+
+
+def _fsync_dir(path: str) -> None:
+    """Best-effort fsync of a directory entry (durability of the rename)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)

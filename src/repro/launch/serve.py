@@ -81,8 +81,23 @@ def main() -> None:
     ap.add_argument("--chaos-nan-rate", type=float, default=0.01,
                     help="P(logits row -> NaN) per advancing row; faulted "
                          "rows quarantine with status=error")
+    # durability knobs (ISSUE 9)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="durable state root: atomic point-in-time engine "
+                         "snapshots plus a write-ahead request journal, "
+                         "fsync'd once per tick")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="snapshot every N ticks (0 = only the baseline "
+                         "snapshot at startup; needs --snapshot-dir)")
+    ap.add_argument("--restore", action="store_true",
+                    help="recover the engine from --snapshot-dir (latest "
+                         "complete snapshot + journal replay) instead of "
+                         "starting fresh; in-flight requests resume and no "
+                         "new synthetic requests are submitted")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
+    if args.restore and not args.snapshot_dir:
+        ap.error("--restore requires --snapshot-dir")
 
     kv = dict(kv_layout=args.kv_layout, kv_block_size=args.kv_block_size,
               kv_pool_blocks=args.kv_pool_blocks)
@@ -101,27 +116,40 @@ def main() -> None:
             seed=args.chaos_seed, deny_rate=args.chaos_deny_rate,
             preempt_rate=args.chaos_preempt_rate,
             nan_rate=args.chaos_nan_rate))
-    engine = Engine(cfg, params, batch_size=args.batch, max_len=args.max_len,
-                    spec_k=args.spec_k if args.spec else 0,
-                    drafter=args.drafter, prefix_cache=args.prefix_cache,
-                    max_preemptions=args.max_preemptions,
-                    audit_every=args.audit_every, chaos=chaos)
+    if args.restore:
+        engine = Engine.restore(args.snapshot_dir, params, chaos=chaos)
+        d = engine.durability_stats()
+        live = len(engine._queue) + sum(s.req is not None
+                                        for s in engine._slots)
+        print(f"restored from {args.snapshot_dir} (epoch {d['epoch']}): "
+              f"{live} live requests resume, {d['restored_terminal']} "
+              f"already terminal replayed from the journal")
+    else:
+        engine = Engine(cfg, params, batch_size=args.batch,
+                        max_len=args.max_len,
+                        spec_k=args.spec_k if args.spec else 0,
+                        drafter=args.drafter, prefix_cache=args.prefix_cache,
+                        max_preemptions=args.max_preemptions,
+                        audit_every=args.audit_every, chaos=chaos,
+                        snapshot_dir=args.snapshot_dir,
+                        snapshot_every=args.snapshot_every)
     if args.spec and not engine.spec_k:
         print(f"speculation requested but family {cfg.family!r} has no "
               "rewindable sequence dimension — plain decode fallback")
     if args.prefix_cache and not engine.prefix_sharing:
         print(f"prefix cache requested but family {cfg.family!r} / layout "
               f"{cfg.kv_layout!r} cannot share KV blocks — running without")
-    rng = np.random.default_rng(0)
-    system = (rng.integers(0, cfg.vocab_size, args.system_prompt_len)
-              if args.prefix_cache else rng.integers(0, cfg.vocab_size, 0))
-    for rid in range(args.requests):
-        user = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 32)))
-        engine.submit(Request(
-            rid=rid,
-            prompt=np.concatenate([system, user]).astype(np.int32),
-            max_new_tokens=args.max_new_tokens,
-            priority=args.priority, deadline_s=args.deadline_s))
+    if not args.restore:
+        rng = np.random.default_rng(0)
+        system = (rng.integers(0, cfg.vocab_size, args.system_prompt_len)
+                  if args.prefix_cache else rng.integers(0, cfg.vocab_size, 0))
+        for rid in range(args.requests):
+            user = rng.integers(0, cfg.vocab_size, int(rng.integers(4, 32)))
+            engine.submit(Request(
+                rid=rid,
+                prompt=np.concatenate([system, user]).astype(np.int32),
+                max_new_tokens=args.max_new_tokens,
+                priority=args.priority, deadline_s=args.deadline_s))
     done = engine.run()
     if not done.drained:
         print(f"NOT drained: truncated={done.truncated} "
@@ -134,6 +162,13 @@ def main() -> None:
           f"{r['deadline_misses']} deadline misses, "
           f"{r['row_faults']} quarantined rows, {r['audits']} audits"
           + (f", chaos={r['chaos']}" if chaos is not None else ""))
+    if args.snapshot_dir:
+        d = engine.durability_stats()
+        print(f"durability: {d['snapshots_taken']} snapshots under "
+              f"{d['snapshot_dir']} (epoch {d['epoch']}, every "
+              f"{d['snapshot_every'] or 'startup-only'} ticks), "
+              f"journal={'on' if d['journal'] else 'off'} — recover with "
+              f"--restore --snapshot-dir {d['snapshot_dir']}")
     print(f"scheduler: {engine.steps} ticks, {engine.dispatches} dispatches "
           f"(1 per tick, {engine.mixed_ticks} mixed), slot occupancy "
           f"{engine.slot_occupancy:.2f}")

@@ -49,6 +49,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer, whisper, xlstm_stack, zamba
 from repro.models.config import ModelConfig
@@ -278,6 +279,18 @@ def supports_prefix_cache(cfg: ModelConfig) -> bool:
     capture.
     """
     return cfg.kv_layout == "paged" and cfg.family in _TRANSFORMER_FAMILIES
+
+
+def export_cache(cfg: ModelConfig, cache: Params) -> Params:
+    """Device→host capture of every cache leaf, bitwise.
+
+    Serving snapshots persist the resident cache (paged pool + int8 scales,
+    or the slot cache) through the checkpoint leaf codec, which stores bf16
+    and fp8 leaves as unsigned bit views — so the round-trip is exact, not
+    a value-level cast.  This helper is just the tree-wide ``device_get``;
+    the codec lives in ``train/checkpoint.py``.
+    """
+    return jax.tree.map(lambda leaf: np.asarray(jax.device_get(leaf)), cache)
 
 
 def copy_pool_block(cfg: ModelConfig, cache: Params, src, dst) -> Params:

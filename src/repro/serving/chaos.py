@@ -62,6 +62,16 @@ class ChaosConfig:
     preempt_rate: float = 0.0        # P(forced preemption) per tick
     nan_rate: float = 0.0            # P(row -> NaN) per advancing row
     garbage_draft_rate: float = 0.0  # P(draft garbled) per verify row
+    kill_rate: float = 0.0           # P(process death) per tick top
+    kill_after: int | None = None    # deterministic death at the Nth tick
+
+
+class EngineKilled(RuntimeError):
+    """Simulated process death, raised by ``ChaosMonkey.maybe_kill`` at the
+    top of a tick.  Everything the engine had not journaled or snapshotted
+    dies with the process; ``Engine.restore`` must recover the rest — the
+    kill/restore soak asserts the recovered streams are bitwise the
+    never-killed oracle's."""
 
 
 class ChaosMonkey:
@@ -76,9 +86,27 @@ class ChaosMonkey:
         self.config = config if config is not None else ChaosConfig(**rates)
         self._rng = np.random.default_rng(self.config.seed)
         self.injected = {"denials": 0, "preemptions": 0,
-                         "nan_rows": 0, "garbled_drafts": 0}
+                         "nan_rows": 0, "garbled_drafts": 0, "kills": 0}
+        self._ticks_to_kill = self.config.kill_after
 
     # -- seams (called by Engine.run / Engine._admit_head) -----------------
+
+    def maybe_kill(self) -> None:
+        """Once per tick, at the TOP (after the previous tick's journal
+        fsync): simulated process death.  Draws from the rng only when
+        enabled, so a kill-free monkey's other fault streams are unchanged
+        from pre-kill seeds."""
+        if self._ticks_to_kill is not None:
+            self._ticks_to_kill -= 1
+            if self._ticks_to_kill <= 0:
+                self._ticks_to_kill = None
+                self.injected["kills"] += 1
+                raise EngineKilled("chaos: process killed at tick "
+                                   f"{self.config.kill_after} (scheduled)")
+        if (self.config.kill_rate and
+                self._rng.random() < self.config.kill_rate):
+            self.injected["kills"] += 1
+            raise EngineKilled("chaos: process killed at tick top")
 
     def deny_reservation(self) -> bool:
         """One admission attempt: True = pretend the pool cannot reserve."""
@@ -226,21 +254,142 @@ def run_soak(seed: int = 0, n_requests: int = 10) -> list[dict[str, Any]]:
             for cell in SOAK_CELLS]
 
 
+# -- kill/restore soak (ISSUE 9) --------------------------------------------
+
+def run_restart_cell(label: str, kv_layout: str, kv_quant: str,
+                     spec_k: int, prefix_cache: bool, *, seed: int = 0,
+                     n_requests: int = 10,
+                     max_lives: int = 12) -> dict[str, Any]:
+    """One kill/restore cell: the full fault mix PLUS seeded process kills.
+
+    The engine runs with snapshots + write-ahead journal; every
+    ``EngineKilled`` abandons the live engine (the in-process stand-in for
+    a dead process) and a fresh ``Engine.restore`` picks up from disk.
+    Asserts the DURABLE record (``snapshot.journaled_streams`` across every
+    journal epoch): each request reaches a terminal state exactly once, a
+    ``done`` stream is bitwise ``reference_decode`` on the ORIGINAL prompt,
+    a faulted stream is a strict prefix of it, ``audit()`` is green on the
+    final engine, and no pool block leaked across any restart boundary.
+    After ``max_lives`` deaths the monkey stops killing so the soak always
+    drains."""
+    import shutil
+    import tempfile
+
+    from repro.serving import snapshot as snaplib
+
+    rng = np.random.default_rng(seed)
+    cfg = _tiny_cfg(kv_layout, kv_quant)
+    params = api.init_params(cfg, jax.random.PRNGKey(seed))
+    cc = _oracle_cc((kv_layout, kv_quant, spec_k))
+
+    def monkey(life: int) -> ChaosMonkey:
+        # Life 0 dies DETERMINISTICALLY at tick 7 — one tick past the first
+        # periodic snapshot (every 6), so recovery always exercises snapshot
+        # + journal-tail replay regardless of seed.  Later lives die
+        # probabilistically until ``max_lives`` caps the soak.
+        return ChaosMonkey(ChaosConfig(
+            seed=seed + 100 + life, deny_rate=0.05, preempt_rate=0.10,
+            nan_rate=0.02, garbage_draft_rate=0.5 if spec_k else 0.0,
+            kill_after=7 if life == 0 else None,
+            kill_rate=0.08 if 0 < life < max_lives else 0.0))
+
+    max_len = 96
+    workdir = tempfile.mkdtemp(prefix=f"restart_{label}_")
+    engine = Engine(cfg, params, batch_size=4, max_len=max_len,
+                    chunk_size=16, prefill_token_budget=32,
+                    spec_k=spec_k, prefix_cache=prefix_cache,
+                    max_preemptions=2, audit_every=1, chaos=monkey(0),
+                    compile_cache=cc,
+                    snapshot_dir=workdir, snapshot_every=6)
+
+    shared = rng.integers(0, cfg.vocab_size, 24)   # hot prefix for sharing
+    oracle = {}
+    for rid in range(n_requests):
+        if rid % 3 == 0 and prefix_cache:
+            prompt = np.concatenate(
+                [shared, rng.integers(0, cfg.vocab_size, rng.integers(2, 9))])
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, rng.integers(4, 33))
+        r = Request(rid=rid, prompt=prompt.astype(np.int64),
+                    max_new_tokens=int(rng.integers(4, 13)))
+        oracle[rid] = reference_decode(cfg, params, prompt,
+                                       r.max_new_tokens, max_len=max_len,
+                                       compile_cache=cc)
+        engine.submit(r)
+
+    lives = 1
+    while True:
+        try:
+            res = engine.run(max_steps=4000)
+            break
+        except EngineKilled:
+            # the killed engine object is abandoned wholesale — the restore
+            # may only consult what reached disk
+            engine = Engine.restore(workdir, params, chaos=monkey(lives),
+                                    compile_cache=cc)
+            lives += 1
+    assert res.drained, (
+        f"{label}: restart soak did not drain (truncated={res.truncated} "
+        f"stalled={res.stalled} in_flight={res.in_flight})")
+    engine.audit()
+    kills = lives - 1
+    assert kills >= 1, (
+        f"{label}: no kill fired — raise kill_rate or max_steps")
+
+    streams, status = snaplib.journaled_streams(workdir)
+    outcomes: dict[str, int] = {}
+    for rid in range(n_requests):
+        st = status.get(rid)
+        assert st in ("done", "error"), (
+            f"{label}: rid {rid} durable status {st!r} not terminal")
+        outcomes[st] = outcomes.get(st, 0) + 1
+        ref = oracle[rid]
+        got = streams.get(rid, [])
+        if st == "done":
+            assert got == ref, (
+                f"{label}: rid {rid} durable stream diverged across "
+                f"{kills} restart(s):\n  got {got}\n  ref {ref}")
+        else:   # faulted: the stream up to the fault is still the oracle's
+            assert got == ref[:len(got)], (
+                f"{label}: faulted rid {rid} corrupted before its fault")
+    if kv_layout == "paged":
+        assert engine.alloc.n_free == engine.pool_blocks - (
+            len(engine.prefix.blocks()) if engine.prefix is not None else 0), (
+            f"{label}: leaked blocks across the restart boundary")
+    stats = {"cell": label, "lives": lives, "kills": kills,
+             "snapshots_taken": engine.snapshots_taken,
+             "outcomes": outcomes, **engine.resilience_stats()}
+    shutil.rmtree(workdir, ignore_errors=True)
+    return stats
+
+
+def run_restart_soak(seed: int = 0,
+                     n_requests: int = 10) -> list[dict[str, Any]]:
+    """Kill/restore chaos across all six engine mixtures."""
+    return [run_restart_cell(*cell, seed=seed, n_requests=n_requests)
+            for cell in SOAK_CELLS]
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--n-requests", type=int, default=10)
+    p.add_argument("--restart", action="store_true",
+                   help="run the kill/restore soak (snapshots + journal + "
+                        "seeded process kills) instead of the in-process one")
     p.add_argument("--out", default=None,
                    help="write per-cell stats JSON here (CI artifact)")
     args = p.parse_args()
-    stats = run_soak(seed=args.seed, n_requests=args.n_requests)
+    soak = run_restart_soak if args.restart else run_soak
+    stats = soak(seed=args.seed, n_requests=args.n_requests)
     for s in stats:
         print(json.dumps(s))
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"seed": args.seed, "cells": stats}, f, indent=2)
         print(f"wrote {args.out}")
-    print(f"chaos soak OK: {len(stats)} cells green")
+    kind = "kill/restore" if args.restart else "chaos"
+    print(f"{kind} soak OK: {len(stats)} cells green")
 
 
 if __name__ == "__main__":

@@ -103,6 +103,19 @@ class PromptLookupDrafter:
     def history_len(self, slot: int) -> int:
         return len(self._history.get(slot, ()))
 
+    def dump(self) -> dict:
+        """JSON-safe capture: histories only — the suffix index is a pure
+        function of the history and is rebuilt on ``load``."""
+        return {"ngram_max": self.ngram_max, "ngram_min": self.ngram_min,
+                "history": {str(s): list(h) for s, h in self._history.items()}}
+
+    def load(self, state: dict) -> None:
+        """Rebuild per-slot histories (and their indexes) from ``dump()``."""
+        self._history = {}
+        self._index = {}
+        for s, hist in state.get("history", {}).items():
+            self.observe(int(s), hist)
+
 
 DRAFTERS = {
     "plookup": PromptLookupDrafter,

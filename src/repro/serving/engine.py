@@ -140,6 +140,22 @@ dispatch instead:
   drafts) against exactly these seams.  ``run()`` returns a ``RunResult``
   (a list) whose ``truncated``/``in_flight``/``queued`` fields make a
   ``max_steps`` budget hit explicit instead of silently dropping work.
+
+* **Durability (``snapshot_dir=``, ``serving/snapshot.py``).**  Process
+  death is a routine edge operating condition, so serving state is
+  persistable: atomic point-in-time snapshots (device KV pool + the full
+  host control plane — slots, page tables, allocator refcounts, radix
+  cache, request lifecycle fields with deadlines as REMAINING budget,
+  drafter history, compile keys for warm re-jit) plus an append-only
+  write-ahead journal of submit/emit/terminal events, fsync'd once per
+  tick.  ``Engine.restore(dir, params)`` loads the latest complete
+  snapshot, replays the journal — post-snapshot output re-folds into
+  prompts via the ``_fold_slot`` preemption primitive, so re-admission is
+  mostly prefix-cache page-table copies — and resumes with token streams
+  BITWISE equal to the never-killed engine's.  A snapshot interrupted
+  mid-write is never observed (the previous complete one wins), and the
+  injectable ``clock`` keeps restored deadlines counting down from what
+  was left, not from a dead process's monotonic base.
 """
 
 from __future__ import annotations
@@ -330,7 +346,12 @@ class Engine:
                  check_finite: bool = True,
                  audit_every: int = 0,
                  chaos: Any = None,
-                 compile_cache: CompileCache | None = None):
+                 compile_cache: CompileCache | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 snapshot_dir: str | None = None,
+                 snapshot_every: int = 0,
+                 snapshot_keep: int = 2,
+                 journal: bool = True):
         if prefill_policy not in ("mixed", "stall"):
             raise ValueError(f"unknown prefill_policy {prefill_policy!r}")
         if spec_k < 0:
@@ -462,6 +483,27 @@ class Engine:
         self.audits = 0              # audit() passes run (all green)
         self._admit_seq = 0          # monotonic admission counter (slot age)
         self._live_rids: set = set() # queued + running rids (duplicate gate)
+        # -- durability layer (snapshots + write-ahead journal) --------------
+        # clock is injectable so lifecycle tests exercise nonzero deadlines
+        # deterministically and snapshots serialize deadlines as REMAINING
+        # budget (a restored engine's clock has a different monotonic base)
+        self.clock = clock
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.snapshot_keep = snapshot_keep
+        self.journal_enabled = journal
+        self.snapshots_taken = 0
+        # terminal events replayed from the journal at restore (requests
+        # that finished after the last snapshot in the killed process; the
+        # caller's objects are gone, so restore surfaces them here)
+        self.restored_terminal: list[Request] = []
+        self._journal: Any = None
+        self._snap_epoch = -1
+        if snapshot_dir is not None:
+            # baseline snapshot: restore ALWAYS has a complete snapshot to
+            # start from, and the epoch's journal captures everything after
+            from repro.serving import snapshot as _snaplib
+            _snaplib.attach(self, snapshot_dir)
 
     # -- client API ----------------------------------------------------------
 
@@ -488,8 +530,19 @@ class Engine:
                 "rids must be unique among live requests")
         req.status = "queued"
         self._live_rids.add(req.rid)
-        req.submitted_at = time.monotonic()
+        req.submitted_at = self.clock()
         self._queue.append(req)
+        if self._journal is not None:
+            self._journal.append({
+                "ev": "submit", "rid": req.rid,
+                "prompt": np.asarray(req.prompt).tolist(),
+                "max_new": req.max_new_tokens, "priority": req.priority,
+                "deadline": req.deadline_s,
+                "frames": (None if req.frames is None
+                           else np.asarray(req.frames).tolist())})
+            # durable immediately: a submit outside run() must survive a
+            # kill before the next tick-batch fsync
+            self._journal.commit()
 
     def cancel(self, rid: int) -> bool:
         """Retire request ``rid`` wherever it is in the lifecycle: dequeued
@@ -504,14 +557,51 @@ class Engine:
                 self._queue.remove(r)
                 self.cancels += 1
                 self._terminal(r, "cancelled")
+                if self._journal is not None:
+                    self._journal.commit()
                 return True
         for i, s in enumerate(self._slots):
             if s.req is not None and s.req.rid == rid:
                 self.cancels += 1
                 self._terminal(s.req, "cancelled")
                 self._free_slot(i)
+                if self._journal is not None:
+                    self._journal.commit()
                 return True
         return False
+
+    def snapshot(self) -> str:
+        """Write a point-in-time snapshot to ``snapshot_dir`` (atomic: temp
+        dir + ``os.replace``) and rotate the write-ahead journal to a fresh
+        epoch.  Returns the snapshot directory.  See ``serving/snapshot.py``
+        for the durability contract."""
+        if self.snapshot_dir is None:
+            raise RuntimeError("engine has no snapshot_dir")
+        from repro.serving import snapshot as _snaplib
+        return _snaplib.save(self)
+
+    @classmethod
+    def restore(cls, snapshot_dir: str, params: Any,
+                **overrides) -> "Engine":
+        """Rebuild a process-equivalent engine from the latest complete
+        snapshot under ``snapshot_dir``, replaying the journal of everything
+        that happened after it.  Restored token streams are bitwise equal to
+        the never-killed engine's (and so to ``reference_decode``).
+        ``overrides`` replace constructor kwargs (e.g. a fresh ``chaos``
+        monkey or a shared ``compile_cache``)."""
+        from repro.serving import snapshot as _snaplib
+        return _snaplib.restore_engine(snapshot_dir, params, **overrides)
+
+    def durability_stats(self) -> dict[str, Any]:
+        """Snapshot/journal counters for launch stats lines."""
+        return {
+            "snapshot_dir": self.snapshot_dir,
+            "snapshot_every": self.snapshot_every,
+            "snapshots_taken": self.snapshots_taken,
+            "epoch": self._snap_epoch,
+            "journal": self._journal is not None,
+            "restored_terminal": len(self.restored_terminal),
+        }
 
     @property
     def compile_budget(self) -> int:
@@ -710,8 +800,11 @@ class Engine:
         assert status in TERMINAL_STATES, status
         req.status = status
         req.done = True
-        req.finished_at = time.monotonic()
+        req.finished_at = self.clock()
         self._live_rids.discard(req.rid)
+        if self._journal is not None:
+            self._journal.append({"ev": "terminal", "rid": req.rid,
+                                  "status": status, "error": req.error})
         if completed is not None:
             completed.append(req)
 
@@ -804,7 +897,7 @@ class Engine:
         ``deadline_s=0.0`` miss deterministically at the first sweep."""
         if not self.enforce_deadlines:
             return
-        now = time.monotonic()
+        now = self.clock()
 
         def missed(r: Request) -> bool:
             return (r.deadline_s is not None and
@@ -850,17 +943,13 @@ class Engine:
                 best, best_key = i, key
         return best
 
-    def _preempt(self, idx: int, *, requeue_front: bool = False) -> None:
-        """Evict a running request, keeping its work: accepted output folds
-        into the prompt (re-admission recomputes nothing semantically — the
-        folded run's token stream is bitwise the never-preempted one, since
-        emit-time lengths realign exactly), and under prefix sharing the
-        slot's fully written resident blocks (prompt + all but the newest
-        token) are donated to the radix cache first, so re-admission is
-        mostly a page-table copy via ``_prefix_plan``.  Requeued behind the
-        current head by default — the head caused the preemption and must
-        win the freed space — or at the front for a forced (chaos)
-        preemption with no waiting head."""
+    def _fold_slot(self, idx: int) -> None:
+        """The lossless fold primitive shared by preemption and snapshot
+        restore: donate the slot's fully written resident blocks to the
+        radix cache (prompt AND accepted output — so re-admission is mostly
+        a page-table copy via ``_prefix_plan``), then fold the accepted
+        output into the prompt.  The folded run's token stream is bitwise
+        the never-folded one, since emit-time lengths realign exactly."""
         slot = self._slots[idx]
         req = slot.req
         if self.prefix is not None and slot.length >= self.block_size:
@@ -881,6 +970,16 @@ class Engine:
                 np.asarray(req.prompt, np.int64),
                 np.asarray(req.output[req.folded:], np.int64)])
             req.folded = len(req.output)
+
+    def _preempt(self, idx: int, *, requeue_front: bool = False) -> None:
+        """Evict a running request, keeping its work: ``_fold_slot`` donates
+        its blocks and folds accepted output into the prompt (re-admission
+        recomputes nothing semantically).  Requeued behind the current head
+        by default — the head caused the preemption and must win the freed
+        space — or at the front for a forced (chaos) preemption with no
+        waiting head."""
+        req = self._slots[idx].req
+        self._fold_slot(idx)
         req.preemptions += 1
         req.status = "queued"
         self.preemptions += 1
@@ -1127,13 +1226,16 @@ class Engine:
         """Record one generated token; finish/free the slot when done."""
         slot = self._slots[idx]
         req = slot.req
-        now = time.monotonic()
+        now = self.clock()
         if first and req.first_token_at is None:
             # a preempted request keeps its ORIGINAL first-token time: the
             # re-prefill's "first" token is really a later output token
             req.first_token_at = now
         req.output.append(token)
         req.token_times.append(now)
+        if self._journal is not None:
+            self._journal.append({"ev": "emit", "rid": req.rid,
+                                  "tok": int(token)})
         slot.last_token = token
         if self.drafter is not None:
             self.drafter.observe(idx, (token,))
@@ -1164,7 +1266,15 @@ class Engine:
         stalled = False                # engine's lifetime
         idle = 0                       # consecutive no-row no-admission ticks
         while self.steps - start_steps < max_steps:
-            # 0. lifecycle sweeps: expired deadlines retire first (queued
+            # 0. chaos process death fires at the TOP of the tick, after the
+            # previous tick's journal batch was fsync'd — so a kill can lose
+            # at most un-dispatched work, never an emitted token (getattr:
+            # older monkeys/test doubles predate the kill seam)
+            if self.chaos is not None:
+                kill = getattr(self.chaos, "maybe_kill", None)
+                if kill is not None:
+                    kill()
+            # lifecycle sweeps: expired deadlines retire first (queued
             # or mid-flight), then chaos may force-preempt a running row
             self._sweep_deadlines(completed)
             if self.chaos is not None and self.max_preemptions:
@@ -1392,6 +1502,16 @@ class Engine:
                     self._emit(i, tok, completed, first=False)
             if self.audit_every and self.steps % self.audit_every == 0:
                 self.audit()
+            # 4. durability: one fsync per tick batch, then maybe rotate a
+            # fresh snapshot — the snapshot sees every event the journal
+            # committed, so a kill between them loses nothing
+            if self._journal is not None:
+                self._journal.commit()
+            if (self.snapshot_dir is not None and self.snapshot_every and
+                    self.steps % self.snapshot_every == 0):
+                self.snapshot()
+        if self._journal is not None:
+            self._journal.commit()
         in_flight = sum(s.req is not None for s in self._slots)
         truncated = (self.steps - start_steps >= max_steps and
                      bool(in_flight or self._queue))

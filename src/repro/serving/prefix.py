@@ -260,3 +260,52 @@ class RadixPrefixCache:
         self.root = {}
         self._nodes = []
         return blocks
+
+    def dump(self) -> dict:
+        """JSON-safe structural capture for serving snapshots.
+
+        Each node is recorded with its FULL root-to-node token path (not
+        just the edge), so ``load`` can rebuild the tree by inserting paths
+        in depth order without assuming anything about dict ordering.  LRU
+        timestamps and the clock survive, so eviction order after restore
+        matches the never-killed engine.
+        """
+        entries = []
+        for n in self._nodes:
+            path, cur = [], n
+            while cur is not None:
+                path.append(cur.tokens)
+                cur = cur.parent
+            toks = [int(t) for chunk in reversed(path) for t in chunk]
+            entries.append({"tokens": toks, "block": int(n.block),
+                            "last_used": int(n.last_used)})
+        return {"block_size": self.block_size, "clock": self._clock,
+                "nodes": entries}
+
+    def load(self, state: dict) -> None:
+        """Rebuild from a ``dump()`` capture into an EMPTY cache.
+
+        Only structure is restored — the cache's per-node block references
+        are accounted for by the restored allocator refcount arrays, so no
+        increfs happen here.
+        """
+        if self._nodes:
+            raise RuntimeError("load() requires an empty prefix cache")
+        if state["block_size"] != self.block_size:
+            raise ValueError(
+                f"snapshot block_size {state['block_size']} != engine "
+                f"block_size {self.block_size}")
+        bs = self.block_size
+        # parents before children: shorter paths first
+        for e in sorted(state["nodes"], key=lambda e: len(e["tokens"])):
+            toks = e["tokens"]
+            level, parent = self.root, None
+            for j in range(0, len(toks) - bs, bs):
+                parent = level[tuple(toks[j:j + bs])]
+                level = parent.children
+            chunk = tuple(toks[-bs:])
+            node = _Node(chunk, int(e["block"]), parent)
+            node.last_used = int(e["last_used"])
+            level[chunk] = node
+            self._nodes.append(node)
+        self._clock = int(state["clock"])

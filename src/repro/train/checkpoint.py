@@ -13,9 +13,14 @@ Properties the tests pin down:
 * **elastic restore**: arrays are saved as full (unsharded) npy and restored
   with ``jax.device_put`` against the *target* mesh's shardings — a 16×16
   checkpoint restores onto 4×2 or 2×16×16 unchanged (mesh-shape elasticity);
-* atomicity: writes go to ``<dir>.tmp`` then ``os.replace`` — a preempted
-  save never corrupts the latest complete checkpoint;
+* atomicity: writes go through ``core.atomic.atomic_dir`` (``<dir>.tmp``
+  then ``os.replace``) — a preempted save never corrupts the latest complete
+  checkpoint; the same helper backs serving snapshots;
 * retention: ``keep`` newest checkpoints are preserved, older ones pruned.
+
+The leaf codec (``write_state``/``read_state``) is exposed for the serving
+snapshot store, which wants the same bit-exact bf16/fp8 round-trip for KV
+pool leaves without the step-directory naming scheme.
 
 On a real multi-host pod each host would write its addressable shards
 (process-local npy per shard) — the manifest layout already carries the
@@ -25,7 +30,6 @@ are the degenerate case.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import re
@@ -35,6 +39,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.core.atomic import atomic_dir
 from repro.core.quant import QuantizedTensor
 from repro.core.sparsity import SparseQuantizedTensor
 
@@ -79,71 +84,51 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def save(ckpt_dir: str, step: int, state: dict[str, Any],
-         extra: dict | None = None, keep: int = 3) -> str:
-    """state: arbitrary pytree dict (params, opt_state, ...)."""
-    final = os.path.join(ckpt_dir, f"step_{step:09d}")
-    tmp = final + ".tmp"
-    os.makedirs(os.path.join(tmp, "arrays"), exist_ok=True)
-
-    leaves, treedef = _flatten_with_paths(state)
-    manifest = {"step": step, "extra": extra or {}, "leaves": []}
-    for i, (path, leaf) in enumerate(leaves):
-        entry: dict[str, Any] = {"path": _path_str(path), "id": i}
-        if isinstance(leaf, _SPECIALS):
-            entry["kind"] = type(leaf).__name__
-            entry["meta"] = {"shape": list(leaf.shape),
-                             "group_size": leaf.group_size}
-            if isinstance(leaf, SparseQuantizedTensor):
-                entry["meta"]["density"] = leaf.density
-                entry["meta"]["tile_uniform"] = leaf.tile_uniform
-            sub = leaf.tree_flatten()[0]
-            entry["fields"] = []
-            entry["field_dtypes"] = []
-            for j, arr in enumerate(sub):
-                fn = f"{i:05d}_{j}.npy"
-                sav, dt = _to_savable(np.asarray(jax.device_get(arr)))
+def write_state(final: str, state: dict[str, Any],
+                extra: dict | None = None, step: int = 0) -> str:
+    """Atomically write ``state`` (arbitrary pytree dict) to directory
+    ``final`` in the manifest+arrays format.  Used by both training
+    checkpoints (as ``step_*`` dirs) and serving snapshots."""
+    with atomic_dir(final) as tmp:
+        os.makedirs(os.path.join(tmp, "arrays"), exist_ok=True)
+        leaves, treedef = _flatten_with_paths(state)
+        manifest = {"step": step, "extra": extra or {}, "leaves": []}
+        for i, (path, leaf) in enumerate(leaves):
+            entry: dict[str, Any] = {"path": _path_str(path), "id": i}
+            if isinstance(leaf, _SPECIALS):
+                entry["kind"] = type(leaf).__name__
+                entry["meta"] = {"shape": list(leaf.shape),
+                                 "group_size": leaf.group_size}
+                if isinstance(leaf, SparseQuantizedTensor):
+                    entry["meta"]["density"] = leaf.density
+                    entry["meta"]["tile_uniform"] = leaf.tile_uniform
+                sub = leaf.tree_flatten()[0]
+                entry["fields"] = []
+                entry["field_dtypes"] = []
+                for j, arr in enumerate(sub):
+                    fn = f"{i:05d}_{j}.npy"
+                    sav, dt = _to_savable(np.asarray(jax.device_get(arr)))
+                    np.save(os.path.join(tmp, "arrays", fn), sav)
+                    entry["fields"].append(fn)
+                    entry["field_dtypes"].append(dt)
+            else:
+                fn = f"{i:05d}.npy"
+                sav, dt = _to_savable(np.asarray(jax.device_get(leaf)))
                 np.save(os.path.join(tmp, "arrays", fn), sav)
-                entry["fields"].append(fn)
-                entry["field_dtypes"].append(dt)
-        else:
-            fn = f"{i:05d}.npy"
-            sav, dt = _to_savable(np.asarray(jax.device_get(leaf)))
-            np.save(os.path.join(tmp, "arrays", fn), sav)
-            entry["file"] = fn
-            entry["dtype"] = dt
-        manifest["leaves"].append(entry)
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    _prune(ckpt_dir, keep)
+                entry["file"] = fn
+                entry["dtype"] = dt
+            manifest["leaves"].append(entry)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
     return final
 
 
-def _prune(ckpt_dir: str, keep: int) -> None:
-    steps = sorted(
-        (d for d in os.listdir(ckpt_dir) if re.match(r"step_\d+$", d)))
-    for d in steps[:-keep] if keep else []:
-        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
-
-
-def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if re.match(r"step_\d+$", d)]
-    return max(steps) if steps else None
-
-
-def restore(ckpt_dir: str, step: int, like: dict[str, Any],
-            shardings: Any = None) -> tuple[dict[str, Any], dict]:
-    """Restore into the structure of ``like`` (shape/dtype tree), placing
-    leaves with ``shardings`` (same tree structure) if given — this is the
-    elastic-resharding path: the stored full arrays are re-partitioned for
-    whatever mesh the restoring job runs on."""
-    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+def read_state(d: str, like: dict[str, Any],
+               shardings: Any = None) -> tuple[dict[str, Any], dict]:
+    """Read a ``write_state`` directory into the structure of ``like``
+    (shape/dtype tree), placing leaves with ``shardings`` (same tree
+    structure) if given — the elastic-resharding path: stored full arrays
+    are re-partitioned for whatever mesh the restoring job runs on."""
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
 
@@ -186,3 +171,34 @@ def restore(ckpt_dir: str, step: int, like: dict[str, Any],
                 out.append(jax.numpy.asarray(arr))
     state = jax.tree_util.tree_unflatten(treedef, out)
     return state, manifest["extra"]
+
+
+def save(ckpt_dir: str, step: int, state: dict[str, Any],
+         extra: dict | None = None, keep: int = 3) -> str:
+    """state: arbitrary pytree dict (params, opt_state, ...)."""
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    write_state(final, state, extra, step)
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        (d for d in os.listdir(ckpt_dir) if re.match(r"step_\d+$", d)))
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if re.match(r"step_\d+$", d)]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: dict[str, Any],
+            shardings: Any = None) -> tuple[dict[str, Any], dict]:
+    """Restore into the structure of ``like`` — see ``read_state``."""
+    return read_state(os.path.join(ckpt_dir, f"step_{step:09d}"),
+                      like, shardings)

@@ -29,13 +29,14 @@ WEIGHTS = {
     "test_distribution.py": 12,
     "test_ffn_fused.py": 42,
     "test_kernels.py": 45,
-    "test_lifecycle.py": 17,
+    "test_lifecycle.py": 18,
     "test_mixed.py": 27,
     "test_paged_engine.py": 11,
     "test_paged_fuzz.py": 14,
     "test_prefix.py": 27,
     "test_quant.py": 10,
     "test_serving.py": 12,
+    "test_snapshot.py": 15,
     "test_sparsity.py": 14,
     "test_spec.py": 27,
     "test_substrate.py": 24,

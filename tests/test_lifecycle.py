@@ -169,6 +169,39 @@ def test_deadline_zero_misses_deterministically(setup):
     assert {r.rid for r in done} == {0, 1, 2}
 
 
+def test_nonzero_deadline_fires_on_injected_clock(setup):
+    """With an injectable engine clock a NONZERO deadline is deterministic:
+    the miss fires exactly when the clock crosses submit + deadline_s, and
+    one tick before it does not."""
+    cfg, params = setup
+
+    class Clock:
+        t = 1000.0
+
+        def __call__(self):
+            return self.t
+
+    clock = Clock()
+    eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16,
+                 clock=clock)
+    rng = np.random.default_rng(11)
+    r = Request(rid=0, prompt=_prompt(rng, 5), max_new_tokens=4,
+                deadline_s=30.0)
+    eng.submit(r)
+    assert r.submitted_at == 1000.0
+    clock.t = 1029.9                     # inside budget: runs to done
+    eng.run()
+    assert r.status == "done" and len(r.output) == 4
+
+    late = Request(rid=1, prompt=_prompt(rng, 5), max_new_tokens=4,
+                   deadline_s=30.0)
+    eng.submit(late)
+    clock.t = 1060.0                     # 30.1 s after ITS submit: expired
+    eng.run()
+    assert late.status == "deadline_missed" and late.output == []
+    assert eng.deadline_misses == 1
+
+
 def test_deadlines_not_enforced_when_disabled(setup):
     cfg, params = setup
     eng = Engine(cfg, params, batch_size=1, max_len=64, chunk_size=16,

@@ -1,0 +1,428 @@
+"""Crash-safe serving tests (ISSUE 9): atomic snapshot dirs, the
+write-ahead journal, Engine.restore's replay-and-fold recovery, torn
+snapshot/journal tolerance, remaining-budget deadlines across restarts,
+and a kill/restore soak cell (the full matrix runs as the CI restart-soak
+step)."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.atomic import atomic_dir
+from repro.core.compiler import CompileCache
+from repro.models import api
+from repro.serving import snapshot as snaplib
+from repro.serving.chaos import run_restart_cell
+from repro.serving.engine import Engine, Request, reference_decode
+
+_REF_CC = CompileCache()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
+                           kv_layout="paged", kv_block_size=8,
+                           kv_pool_blocks=24)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class FakeClock:
+    """Injectable engine clock: time moves only when the test says so."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _reqs(cfg, rng, n, max_new=6):
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(4, 17))
+                                        ).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _oracle(cfg, params, reqs):
+    return {r.rid: reference_decode(cfg, params, r.prompt, r.max_new_tokens,
+                                    max_len=64, compile_cache=_REF_CC)
+            for r in reqs}
+
+
+def _free_expected(eng):
+    """Blocks that must be free after a drain: everything except what the
+    prefix cache legitimately holds."""
+    held = len(eng.prefix.blocks()) if eng.prefix is not None else 0
+    return eng.pool_blocks - held
+
+
+# -- atomic directory helper ------------------------------------------------
+
+def test_atomic_dir_commit_and_replace(tmp_path):
+    final = str(tmp_path / "out")
+    with atomic_dir(final) as tmp:
+        with open(os.path.join(tmp, "a.txt"), "w") as f:
+            f.write("one")
+    assert open(os.path.join(final, "a.txt")).read() == "one"
+    assert not os.path.exists(final + ".tmp")
+    # a second commit REPLACES the first atomically
+    with atomic_dir(final) as tmp:
+        with open(os.path.join(tmp, "b.txt"), "w") as f:
+            f.write("two")
+    assert os.listdir(final) == ["b.txt"]
+
+
+def test_atomic_dir_abort_leaves_previous(tmp_path):
+    final = str(tmp_path / "out")
+    with atomic_dir(final) as tmp:
+        with open(os.path.join(tmp, "a.txt"), "w") as f:
+            f.write("good")
+    with pytest.raises(RuntimeError):
+        with atomic_dir(final) as tmp:
+            with open(os.path.join(tmp, "a.txt"), "w") as f:
+                f.write("torn")
+            raise RuntimeError("die mid-write")
+    assert open(os.path.join(final, "a.txt")).read() == "good"
+    assert not os.path.exists(final + ".tmp")
+
+
+# -- torn stores are never observed -----------------------------------------
+
+def test_snapshots_ignore_torn_dirs(setup, tmp_path):
+    cfg, params = setup
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 snapshot_dir=wd)
+    good_epoch, good_path = snaplib.latest_snapshot(wd)
+    # a .tmp turd and a higher-epoch dir missing its device manifest must
+    # both be invisible to restore
+    os.makedirs(os.path.join(wd, "snap_000099.tmp"))
+    torn = os.path.join(wd, "snap_000007")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "host.json"), "w") as f:
+        f.write("{}")
+    assert snaplib.latest_snapshot(wd) == (good_epoch, good_path)
+    restored = Engine.restore(wd, params,
+                              compile_cache=eng.cache_compiles)
+    assert restored.run().drained          # empty engine, clean drain
+    assert snaplib.latest_snapshot(wd) == (good_epoch, good_path)
+
+
+def test_journal_torn_tail_ignored(tmp_path):
+    path = str(tmp_path / "journal_000000.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"ev": "submit", "rid": 0}) + "\n")
+        f.write(json.dumps({"ev": "emit", "rid": 0, "tok": 7}) + "\n")
+        f.write('{"ev": "emit", "rid": 0, "to')      # kill mid-write
+    events = snaplib.read_journal(path)
+    assert [e["ev"] for e in events] == ["submit", "emit"]
+
+
+# -- mid-flight snapshot + restore ------------------------------------------
+
+def test_midflight_restore_drains_bitwise(setup, tmp_path):
+    """Kill the engine mid-flight after a snapshot: the restored engine
+    drains every request with the exact tokens the never-killed engine
+    would have emitted, audits green, and leaks nothing."""
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    reqs = _reqs(cfg, rng, 6)
+    oracle = _oracle(cfg, params, reqs)
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 audit_every=1, snapshot_dir=wd)
+    for r in reqs:
+        eng.submit(r)
+    mid = eng.run(max_steps=5)
+    assert not mid.drained                  # work genuinely in flight
+    eng.snapshot()
+    # ...three more ticks AFTER the snapshot land in the journal only, so
+    # restore must replay + fold them
+    eng.run(max_steps=3)
+
+    restored = Engine.restore(wd, params,
+                              compile_cache=eng.cache_compiles)
+    res = restored.run()
+    assert res.drained
+    restored.audit()
+    streams, status = snaplib.journaled_streams(wd)
+    for r in reqs:
+        assert status[r.rid] == "done"
+        assert streams[r.rid] == oracle[r.rid], f"rid {r.rid} diverged"
+    assert restored.alloc.n_free == _free_expected(restored)
+
+
+def test_restore_replays_journal_tail(setup, tmp_path):
+    """With only the baseline snapshot on disk, the ENTIRE run lives in
+    the journal: restore replays it and reports every request as already
+    terminal."""
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    reqs = _reqs(cfg, rng, 4)
+    oracle = _oracle(cfg, params, reqs)
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 snapshot_dir=wd, snapshot_every=0)
+    for r in reqs:
+        eng.submit(r)
+    assert eng.run().drained
+
+    restored = Engine.restore(wd, params,
+                              compile_cache=eng.cache_compiles)
+    assert len(restored.restored_terminal) == 4
+    assert {r.rid for r in restored.restored_terminal} == {0, 1, 2, 3}
+    assert all(r.status == "done" for r in restored.restored_terminal)
+    for r in restored.restored_terminal:
+        assert r.output == oracle[r.rid]
+    assert restored.run().drained           # nothing left to do
+    assert restored.alloc.n_free == _free_expected(restored)
+
+
+def test_counters_and_cfg_roundtrip(setup, tmp_path):
+    cfg, params = setup
+    assert snaplib.cfg_from_dict(snaplib.cfg_to_dict(cfg)) == cfg
+    rng = np.random.default_rng(3)
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 snapshot_dir=wd)
+    for r in _reqs(cfg, rng, 3):
+        eng.submit(r)
+    eng.run()
+    eng.snapshot()
+    restored = Engine.restore(wd, params,
+                              compile_cache=eng.cache_compiles)
+    for k in snaplib._COUNTERS:
+        if k == "snapshots_taken":
+            continue                        # restore does not snapshot
+        if k == "audits":
+            continue                        # restore runs one audit itself
+        assert getattr(restored, k) == getattr(eng, k), k
+    assert restored.audits == eng.audits + 1
+    assert restored.steps == eng.steps
+
+
+# -- prefix cache survives the crash ----------------------------------------
+
+def test_restored_prefix_cache_drop_returns_all_blocks(setup, tmp_path):
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    system = rng.integers(0, cfg.vocab_size, 16)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [system, rng.integers(0, cfg.vocab_size, 4)]
+                    ).astype(np.int32),
+                    max_new_tokens=4)
+            for i in range(4)]
+    oracle = _oracle(cfg, params, reqs)
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 prefix_cache=True, audit_every=1, snapshot_dir=wd)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=6)
+    eng.snapshot()
+
+    restored = Engine.restore(wd, params,
+                              compile_cache=eng.cache_compiles)
+    assert restored.run().drained
+    restored.audit()
+    streams, _ = snaplib.journaled_streams(wd)
+    assert all(streams[r.rid] == oracle[r.rid] for r in reqs)
+    # the radix cache holds exactly one reference per cached block: flushing
+    # it must return the pool to fully free
+    assert restored.prefix.blocks()         # something was actually cached
+    dropped = restored.drop_prefix_cache()
+    assert dropped > 0
+    assert restored.alloc.n_free == restored.pool_blocks
+    restored.audit()
+
+
+# -- deadlines restore as remaining budget ----------------------------------
+
+def test_deadline_restored_as_remaining_budget(setup, tmp_path):
+    """50 s deadline, 20 s consumed pre-kill, arbitrary downtime: the
+    restored request has exactly 30 s left, and downtime never counts."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    wd = str(tmp_path / "snaps")
+    clock = FakeClock(100.0)
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 snapshot_dir=wd, clock=clock)
+    eng.submit(Request(rid=0,
+                       prompt=rng.integers(0, 256, 8).astype(np.int32),
+                       max_new_tokens=4, deadline_s=50.0))
+    clock.t = 120.0                          # 20 s burned while queued
+    eng.snapshot()
+
+    clock2 = FakeClock(5000.0)               # the process was dead a while
+    restored = Engine.restore(wd, params, clock=clock2,
+                              compile_cache=eng.cache_compiles)
+    (req,) = restored._queue
+    remaining = req.deadline_s - (clock2() - req.submitted_at)
+    assert remaining == pytest.approx(30.0)
+    # past the remaining budget the miss fires on the next tick
+    clock2.t = 5000.0 + 30.0 + 1e-3
+    res = restored.run()
+    assert res.drained
+    assert req.status == "deadline_missed"
+
+
+def test_fresh_deadline_not_aged_by_fake_clock(setup, tmp_path):
+    """Control: the same deadline with NO consumed budget survives a
+    snapshot/restore with its full allowance."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    wd = str(tmp_path / "snaps")
+    clock = FakeClock(7.0)
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 snapshot_dir=wd, clock=clock)
+    eng.submit(Request(rid=0,
+                       prompt=rng.integers(0, 256, 8).astype(np.int32),
+                       max_new_tokens=4, deadline_s=50.0))
+    eng.snapshot()                           # zero time consumed
+    clock2 = FakeClock(0.0)
+    restored = Engine.restore(wd, params, clock=clock2,
+                              compile_cache=eng.cache_compiles)
+    (req,) = restored._queue
+    assert (req.deadline_s -
+            (clock2() - req.submitted_at)) == pytest.approx(50.0)
+    res = restored.run()                     # clock frozen: plenty of budget
+    assert res.drained and req.status == "done"
+
+
+# -- accounting across the boundary -----------------------------------------
+
+def test_summarize_consistent_across_boundary(setup, tmp_path):
+    """restored_terminal + the post-restore RunResult together cover every
+    request exactly once, and summarize() over the union is coherent."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    reqs = _reqs(cfg, rng, 6)
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 snapshot_dir=wd, snapshot_every=4)
+    for r in reqs:
+        eng.submit(r)
+    pre = eng.run(max_steps=9)               # some finished, some not
+    assert pre and not pre.drained
+
+    restored = Engine.restore(wd, params,
+                              compile_cache=eng.cache_compiles)
+    res = restored.run()
+    assert res.drained
+    # partition: pre-kill terminals and post-restore terminals are disjoint
+    # and together cover every request; terminals that landed after the
+    # LAST snapshot also replay into restored_terminal (a subset of pre)
+    pre_rids = {r.rid for r in pre}
+    post_rids = {r.rid for r in res}
+    replay_rids = {r.rid for r in restored.restored_terminal}
+    assert not pre_rids & post_rids
+    assert sorted(pre_rids | post_rids) == [0, 1, 2, 3, 4, 5]
+    assert replay_rids <= pre_rids
+    union = ([r for r in pre if r.rid not in replay_rids] +
+             list(restored.restored_terminal) + list(res))
+    assert sorted(r.rid for r in union) == [0, 1, 2, 3, 4, 5]
+    summary = Engine.summarize(union)
+    assert summary["n"] == 6
+    assert summary["completed"] == 6
+    streams, _ = snaplib.journaled_streams(wd)
+    assert summary["total_tokens"] == float(
+        sum(len(streams[r.rid]) for r in reqs))
+    assert summary["mean_ttft_s"] >= 0.0
+    assert all(r.finished_at is not None for r in union)
+
+
+# -- warm re-jit --------------------------------------------------------------
+
+def test_restore_warms_saved_compile_keys(setup, tmp_path):
+    cfg, params = setup
+    rng = np.random.default_rng(8)
+    reqs = _reqs(cfg, rng, 4)
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 snapshot_dir=wd)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=4)
+    eng.snapshot()
+    saved = {tuple(k) for k in
+             json.load(open(os.path.join(
+                 snaplib.latest_snapshot(wd)[1], "host.json")))
+             ["compile_keys"]}
+    assert ("mixed", 32) in saved or any(n == "mixed" for n, _ in saved)
+
+    cc = eng.cache_compiles
+    before = cc.misses
+    restored = Engine.restore(wd, params, compile_cache=cc)
+    # every saved executable was re-bound through the SHARED cache: zero
+    # recompiles, and the keys are live before the first real tick
+    assert cc.misses == before
+    assert saved <= set(restored.cache_compiles.keys())
+    assert restored.run().drained
+
+
+# -- store hygiene -----------------------------------------------------------
+
+def test_prune_keeps_journals(setup, tmp_path):
+    cfg, params = setup
+    rng = np.random.default_rng(9)
+    reqs = _reqs(cfg, rng, 3)
+    oracle = _oracle(cfg, params, reqs)
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 snapshot_dir=wd, snapshot_keep=2)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=3)
+    for _ in range(4):
+        eng.snapshot()
+    eng.run()
+    assert len(snaplib.snapshots(wd)) == 2   # pruned to keep
+    journals = [d for d in os.listdir(wd) if d.startswith("journal_")]
+    assert len(journals) == 5                # baseline + 4: never pruned
+    streams, status = snaplib.journaled_streams(wd)
+    for r in reqs:                           # concatenation is still whole
+        assert status[r.rid] == "done"
+        assert streams[r.rid] == oracle[r.rid]
+
+
+# -- drafter state ------------------------------------------------------------
+
+def test_drafter_history_survives_restore(setup, tmp_path):
+    cfg, params = setup
+    rng = np.random.default_rng(10)
+    pat = rng.integers(0, cfg.vocab_size, 4)
+    reqs = [Request(rid=i, prompt=np.tile(pat, 3).astype(np.int32),
+                    max_new_tokens=24) for i in range(3)]
+    oracle = _oracle(cfg, params, reqs)
+    wd = str(tmp_path / "snaps")
+    eng = Engine(cfg, params, batch_size=2, max_len=64, chunk_size=16,
+                 spec_k=3, snapshot_dir=wd)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_steps=3)
+    eng.snapshot()
+    assert eng.drafter.dump()["history"]     # mid-flight rows have history
+
+    restored = Engine.restore(wd, params,
+                              compile_cache=eng.cache_compiles)
+    assert restored.drafter.dump() == eng.drafter.dump()
+    assert restored.run().drained
+    streams, _ = snaplib.journaled_streams(wd)
+    assert all(streams[r.rid] == oracle[r.rid] for r in reqs)
+
+
+# -- kill/restore soak cell (full matrix = CI restart-soak step) --------------
+
+def test_restart_soak_cell_smoke():
+    stats = run_restart_cell("slot", "slot", "none", 0, False,
+                             seed=1, n_requests=6)
+    assert stats["kills"] >= 1
+    assert sum(stats["outcomes"].values()) == 6
