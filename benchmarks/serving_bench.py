@@ -291,6 +291,107 @@ def run_paged_capacity(cfg, params, *, max_len: int = 64,
 
 
 # ---------------------------------------------------------------------------
+# mesh mode (sharded paged serving: resident capacity across a device mesh)
+# ---------------------------------------------------------------------------
+
+_MESH_WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import contextlib, json, sys, time
+sys.path.insert(0, "src")
+import jax
+import numpy as np
+from repro.configs import get_smoke_config
+from repro.models import api
+from repro.parallel.hints import use_mesh
+from repro.serving.engine import Engine, Request
+
+P_DEV, BS, MAX_LEN, N_REQ = 11, 8, 64, 24
+n_dev = jax.device_count()
+
+def mk_cfg(pool_blocks):
+    return get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
+                            kv_layout="paged", kv_block_size=BS,
+                            kv_pool_blocks=pool_blocks)
+
+# single-device engine holds P_DEV + 1 pool rows (null included); the
+# sharded engine holds the SAME rows PER SHARD: n_dev * (P_DEV + 1) rows
+cfg_one = mk_cfg(P_DEV)
+cfg_mesh = mk_cfg(n_dev * (P_DEV + 1) - 1)
+params = api.init_params(cfg_one, jax.random.PRNGKey(0))
+
+def workload():
+    rng = np.random.default_rng(3)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, 256, int(rng.integers(8, 15))
+                                        ).astype(np.int32),
+                    max_new_tokens=8)
+            for i in range(N_REQ)]
+
+def trial(cfg, batch, ctx):
+    reqs = workload()
+    with ctx:
+        engine = Engine(cfg, params, batch_size=batch, max_len=MAX_LEN,
+                        chunk_size=8, audit_every=4)
+        for r in reqs:
+            engine.submit(r)
+        t0 = time.perf_counter()
+        done = engine.run()
+        dt = time.perf_counter() - t0
+        engine.audit()
+    return {
+        "batch_slots": batch,
+        "pool_blocks": engine.pool_blocks,
+        "n_homes": engine.n_homes,
+        "per_device_pool_rows": (engine.pool_blocks + 1) // engine.n_homes,
+        "peak_resident_tokens": engine.peak_resident_tokens,
+        "admission_stalls": engine.admission_stalls,
+        "completed": len(done),
+        "steps": engine.steps,
+        "tokens_per_s": sum(len(r.output) for r in done) / dt,
+        "outputs": {r.rid: [int(t) for t in r.output] for r in reqs},
+    }
+
+single = trial(cfg_one, 4, contextlib.nullcontext())
+mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+sharded = trial(cfg_mesh, 16, use_mesh(mesh))
+tokens_equal = single.pop("outputs") == sharded.pop("outputs")
+print("RESULT " + json.dumps({
+    "n_devices": n_dev,
+    "single_device": single,
+    "sharded": sharded,
+    "resident_tokens_gain": (sharded["peak_resident_tokens"] /
+                             max(single["peak_resident_tokens"], 1)),
+    "tokens_equal": tokens_equal,
+}))
+"""
+
+
+def run_mesh() -> dict:
+    """Sharded paged serving vs a single device at EQUAL per-device KV
+    budget (the PR 10 acceptance cut).
+
+    Runs in a subprocess with 8 forced host devices: the single-device
+    engine gets ``P_DEV + 1`` pool rows; the sharded engine gets the same
+    rows on EACH of the 8 shards (block homes), so resident batch scales
+    with total mesh memory.  Token streams must be identical — the mesh
+    buys capacity, never different tokens."""
+    import os
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_WORKER], capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=900)
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(
+        f"mesh bench worker failed:\nstdout={proc.stdout[-2000:]}\n"
+        f"stderr={proc.stderr[-3000:]}")
+
+
+# ---------------------------------------------------------------------------
 # prefix-sharing mode (shared system prompt, radix cache + CoW paged KV)
 # ---------------------------------------------------------------------------
 
@@ -814,6 +915,10 @@ def run_smoke(path: str = "BENCH_serving.json") -> dict:
     # restart cut: snapshot save cost, Engine.restore latency, and the
     # warm-restore vs cold-start TTFT gap the durable prefix cache buys
     record["restart"] = run_restart(cfg, params)
+    # mesh cut (subprocess, 8 forced host devices): sharded paged serving
+    # must fit >= 1.5x the resident tokens of one device at equal
+    # per-device KV budget, with identical token streams
+    record["mesh"] = run_mesh()
     with open(path, "w") as f:
         json.dump(record, f, indent=2, sort_keys=True)
     print(json.dumps(record, indent=2, sort_keys=True))
@@ -824,7 +929,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="mixed",
                     choices=["mixed", "throughput", "spec", "prefix",
-                             "overload", "restart"])
+                             "overload", "restart", "mesh"])
     ap.add_argument("--arch", default="qwen-7b")
     ap.add_argument("--batches", default="1,2,4,8")
     ap.add_argument("--queue-depths", default="8,16")
@@ -859,6 +964,25 @@ def main() -> None:
         print(f"paged resident-token capacity: {gain:.2f}x the slot layout "
               f"at equal HBM (stalls: paged={rec['paged']['admission_stalls']}"
               f" slot={rec['slot']['admission_stalls']})")
+        return
+
+    if args.mode == "mesh":
+        rec = run_mesh()
+        print(f"{rec['n_devices']} devices, equal per-device KV budget "
+              f"({rec['single_device']['per_device_pool_rows']} pool rows "
+              f"each)")
+        print(f"{'engine':>14} {'slots':>6} {'pool':>6} {'homes':>6} "
+              f"{'resident':>9} {'stalls':>7} {'steps':>6} {'tok/s':>8}")
+        for key, name in (("single_device", "single"),
+                          ("sharded", "sharded")):
+            r = rec[key]
+            print(f"{name:>14} {r['batch_slots']:>6} {r['pool_blocks']:>6} "
+                  f"{r['n_homes']:>6} {r['peak_resident_tokens']:>9} "
+                  f"{r['admission_stalls']:>7} {r['steps']:>6} "
+                  f"{r['tokens_per_s']:>8.1f}")
+        print(f"sharded paged serving holds "
+              f"{rec['resident_tokens_gain']:.2f}x the resident tokens of "
+              f"one device (tokens_equal={rec['tokens_equal']})")
         return
 
     if args.mode == "prefix":

@@ -102,6 +102,7 @@ def decode_blocked_partials(
     v_scale: jax.Array | None = None,
     block_kv: int = DEFAULT_DECODE_BLOCK_KV,
     page_table: jax.Array | None = None,
+    block_home: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Flash-decoding partials over a blocked KV walk (the shared loop).
 
@@ -119,6 +120,15 @@ def decode_blocked_partials(
     Entries past a row's live range point at the null block; its data is
     finite and fully masked, so partials stay bit-identical to the
     contiguous walk over the same token values.
+
+    Sharded pools (the shard_map paged path): ``block_home`` is the first
+    GLOBAL pool row this caller holds — the pool operand is one shard's
+    contiguous run of ``k_cache.shape[0]`` "home" rows out of the full pool.
+    Table entries are still global ids; each is translated to a home-local
+    row, and blocks homed on OTHER shards are masked to exact zeros (their
+    gather index is clamped in-range, the validity mask kills the values),
+    so every logical block is counted by exactly one shard and the partials
+    are ready for the cross-shard log-sum-exp merge.
 
     A ``lax.while_loop`` walks KV blocks and stops after the last block any
     row still needs, so bytes and FLOPs scale with ``max(n_valid)`` instead
@@ -158,6 +168,15 @@ def decode_blocked_partials(
             # logical → physical: gather each row's block from the pool
             ids = jax.lax.dynamic_slice_in_dim(
                 page_table, ib, 1, axis=1)[:, 0]            # (b,)
+            if block_home is not None:
+                # global id → home-local row; non-home blocks clamp to a
+                # resident row and are fully masked below
+                local_rows = k_cache.shape[0]
+                ids = ids - block_home
+                in_home = (ids >= 0) & (ids < local_rows)
+                ids = jnp.clip(ids, 0, local_rows - 1)
+            else:
+                in_home = None
             kb = jnp.take(k_cache, ids, axis=0)             # (b, g, bk, d)
             vb = jnp.take(v_cache, ids, axis=0)
             ksb = None if k_scale is None else jnp.take(k_scale, ids, axis=0)
@@ -175,6 +194,8 @@ def decode_blocked_partials(
         # mask positions a clamped final block re-covers (pos < block_start)
         valid = (pos[None, :] >= block_start) & \
                 (pos[None, :] < n_valid[:, None])           # (b, bk)
+        if page_table is not None and in_home is not None:
+            valid &= in_home[:, None]
         if q_pos is not None:
             valid = valid[:, None, :] & \
                 (pos[None, None, :] <= q_pos[:, :, None])   # (b, sq, bk)

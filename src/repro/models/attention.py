@@ -392,20 +392,29 @@ def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
     q, k, v = _project_qkv(cfg, p, x, positions)
     # write the new K/V at position lengths-1 (static max-token addressing).
     lengths = jnp.asarray(lengths)
+    # shard_map flash-decoding: cache stays sequence-sharded (slot layout)
+    # or block-home-sharded (paged pool), LSE merge across shards
+    # (EXPERIMENTS.md §Perf qwen3-decode)
+    from repro.parallel import decode_attn
+    from repro.parallel.hints import active_mesh
+    mesh = active_mesh()
     if cfg.kv_layout == "paged":
+        # the sharded gate consults the POOL extent (rows incl. null) and
+        # must fire before the single-program paged path; no rolling-SWA
+        # variant exists, so windowed configs stay single-program
+        if cfg.window is None and decode_attn.usable(
+                mesh, b, cfg.n_heads, cfg.n_kv_heads, cache["k"].shape[0],
+                lengths, paged=True):
+            return _attn_decode_paged_sharded(cfg, p, q, k, v, cache,
+                                              lengths, page_table,
+                                              write_mask, mesh)
         return _attn_decode_paged(cfg, p, q, k, v, cache, lengths,
                                   page_table, write_mask)
     cache_len = cache["k"].shape[2]
     rolling = cfg.window is not None and cache_len <= cfg.window
 
-    # shard_map flash-decoding: cache stays sequence-sharded, LSE merge
-    # across shards (EXPERIMENTS.md §Perf qwen3-decode)
-    from repro.parallel import decode_attn
-    from repro.parallel.hints import active_mesh
-    mesh = active_mesh()
     if decode_attn.usable(mesh, b, cfg.n_heads, cfg.n_kv_heads,
-                          cache_len, lengths,
-                          paged=cfg.kv_layout == "paged"):
+                          cache_len, lengths, paged=False):
         scales = ((cache["k_scale"], cache["v_scale"])
                   if cfg.kv_quant == "int8" else None)
         o, new_cache = decode_attn.decode_attention_sharded(
@@ -475,6 +484,26 @@ def attn_decode(cfg, p: Params, x: jax.Array, positions, cache: Params,
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
     out = linear(o, p["wo"], use_kernels=cfg.use_kernels)
     return out, {"k": k_new, "v": v_new}
+
+
+def _attn_decode_paged_sharded(cfg, p: Params, q, k, v, cache: Params,
+                               lengths, page_table, write_mask, mesh):
+    """Paged one-token decode across a device mesh: the pool is partitioned
+    into block homes (``parallel/decode_attn.paged_homes``), each shard
+    writes/attends only blocks it is home to, and the flash-decoding LSE
+    merge combines the partials.  The host allocator guarantees page-table
+    entries resolve to (shard, local block) consistently with this split."""
+    from repro.parallel import decode_attn
+    b = q.shape[0]
+    if page_table is None:
+        page_table = default_page_table(b, cache["k"].shape[0])
+    scales = ((cache["k_scale"], cache["v_scale"])
+              if cfg.kv_quant == "int8" else None)
+    o, new_cache = decode_attn.decode_attention_sharded_paged(
+        q, k, v, cache["k"], cache["v"], lengths, page_table, write_mask,
+        mesh, scales=scales)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return linear(o, p["wo"], use_kernels=cfg.use_kernels), new_cache
 
 
 def _attn_decode_paged(cfg, p: Params, q, k, v, cache: Params, lengths,

@@ -146,23 +146,47 @@ class ChaosMonkey:
 # -- soak harness ----------------------------------------------------------
 
 # every engine mixture the resilience contract must survive: (label,
-# kv_layout, kv_quant, spec_k, prefix_cache)
+# kv_layout, kv_quant, spec_k, prefix_cache, mesh).  The mesh cell forces
+# the engine under a device mesh so decode routes through the sequence-
+# sharded paged path (block homes, per-home reservations) — on a 1-device
+# host it degenerates to a 1-shard shard_map, which still exercises the
+# sharded dispatch end to end; CI runs it with 8 forced host devices.
 SOAK_CELLS = [
-    ("slot",            "slot",  "none", 0, False),
-    ("paged",           "paged", "none", 0, False),
-    ("paged-int8",      "paged", "int8", 0, False),
-    ("paged-spec",      "paged", "none", 3, False),
-    ("paged-prefix",    "paged", "none", 0, True),
-    ("paged-all",       "paged", "int8", 3, True),
+    ("slot",            "slot",  "none", 0, False, False),
+    ("paged",           "paged", "none", 0, False, False),
+    ("paged-int8",      "paged", "int8", 0, False, False),
+    ("paged-spec",      "paged", "none", 3, False, False),
+    ("paged-prefix",    "paged", "none", 0, True,  False),
+    ("paged-all",       "paged", "int8", 3, True,  False),
+    ("paged-mesh",      "paged", "none", 0, True,  True),
 ]
 
 
-def _tiny_cfg(kv_layout: str, kv_quant: str) -> ModelConfig:
+def _tiny_cfg(kv_layout: str, kv_quant: str,
+              mesh: bool = False) -> ModelConfig:
     over = {}
     if kv_layout == "paged":
-        over = {"kv_block_size": 8, "kv_pool_blocks": 40}
+        # the mesh cell needs pool ROWS (blocks + null) divisible by the
+        # shard count, so block homes actually activate: 39 + 1 = 40 rows
+        over = {"kv_block_size": 8,
+                "kv_pool_blocks": 39 if mesh else 40}
     return get_smoke_config("qwen-7b", d_model=64, d_ff=128, vocab_size=256,
                             kv_layout=kv_layout, kv_quant=kv_quant, **over)
+
+
+def _mesh_ctx(mesh: bool):
+    """The forced-mesh cell's engine context: a (1, n_devices) mesh (the
+    oracle always runs OUTSIDE it — parity must be vs the single-device
+    reference).  Pool rows not divisible by the device count just means
+    ``paged_homes`` returns 1 and the cell degrades to the unsharded path
+    — still green, by the balance-not-correctness contract."""
+    import contextlib
+
+    from repro.parallel.hints import use_mesh
+    if not mesh:
+        return contextlib.nullcontext()
+    return use_mesh(jax.make_mesh((1, jax.device_count()),
+                                  ("data", "model")))
 
 
 # oracle executables close over their cfg, so compile caches are shared
@@ -176,7 +200,8 @@ def _oracle_cc(key: tuple) -> CompileCache:
 
 
 def run_soak_cell(label: str, kv_layout: str, kv_quant: str,
-                  spec_k: int, prefix_cache: bool, *, seed: int = 0,
+                  spec_k: int, prefix_cache: bool, mesh: bool = False,
+                  *, seed: int = 0,
                   n_requests: int = 10, compile_cache: CompileCache
                   | None = None) -> dict[str, Any]:
     """One soak cell: a faulted engine vs the unfaulted oracle.
@@ -189,20 +214,18 @@ def run_soak_cell(label: str, kv_layout: str, kv_quant: str,
     stayed green (they raise otherwise).  Returns the cell's stats.
     """
     rng = np.random.default_rng(seed)
-    cfg = _tiny_cfg(kv_layout, kv_quant)
+    cfg = _tiny_cfg(kv_layout, kv_quant, mesh)
     params = api.init_params(cfg, jax.random.PRNGKey(seed))
     cc = (compile_cache if compile_cache is not None
-          else _oracle_cc((kv_layout, kv_quant, spec_k)))
+          else _oracle_cc((kv_layout, kv_quant, spec_k, mesh)))
     monkey = ChaosMonkey(ChaosConfig(
         seed=seed + 1, deny_rate=0.10, preempt_rate=0.15, nan_rate=0.02,
         garbage_draft_rate=0.5 if spec_k else 0.0))
     max_len = 96
-    engine = Engine(cfg, params, batch_size=4, max_len=max_len,
-                    chunk_size=16, prefill_token_budget=32,
-                    spec_k=spec_k, prefix_cache=prefix_cache,
-                    max_preemptions=2, audit_every=1, chaos=monkey,
-                    compile_cache=cc)
 
+    # oracles run OUTSIDE the mesh context: parity is vs the single-device
+    # reference, and the snapshot is taken BEFORE submit (preemption folds
+    # output into the prompt)
     shared = rng.integers(0, cfg.vocab_size, 24)   # hot prefix for sharing
     reqs, oracle = [], {}
     for rid in range(n_requests):
@@ -213,14 +236,20 @@ def run_soak_cell(label: str, kv_layout: str, kv_quant: str,
             prompt = rng.integers(0, cfg.vocab_size, rng.integers(4, 33))
         r = Request(rid=rid, prompt=prompt.astype(np.int64),
                     max_new_tokens=int(rng.integers(4, 13)))
-        # snapshot BEFORE submit: preemption folds output into the prompt
         oracle[rid] = reference_decode(cfg, params, prompt,
                                        r.max_new_tokens, max_len=max_len,
                                        compile_cache=cc)
         reqs.append(r)
-        engine.submit(r)
 
-    done = engine.run(max_steps=4000)
+    with _mesh_ctx(mesh):
+        engine = Engine(cfg, params, batch_size=4, max_len=max_len,
+                        chunk_size=16, prefill_token_budget=32,
+                        spec_k=spec_k, prefix_cache=prefix_cache,
+                        max_preemptions=2, audit_every=1, chaos=monkey,
+                        compile_cache=cc)
+        for r in reqs:
+            engine.submit(r)
+        done = engine.run(max_steps=4000)
     assert done.drained, (
         f"{label}: soak did not drain (truncated={done.truncated} "
         f"stalled={done.stalled} in_flight={done.in_flight})")
@@ -244,6 +273,7 @@ def run_soak_cell(label: str, kv_layout: str, kv_quant: str,
             len(engine.prefix.blocks()) if engine.prefix is not None else 0), (
             f"{label}: leaked blocks after drain")
     return {"cell": label, "outcomes": outcomes,
+            "n_homes": getattr(engine, "n_homes", 1),
             **engine.resilience_stats()}
 
 
@@ -257,7 +287,8 @@ def run_soak(seed: int = 0, n_requests: int = 10) -> list[dict[str, Any]]:
 # -- kill/restore soak (ISSUE 9) --------------------------------------------
 
 def run_restart_cell(label: str, kv_layout: str, kv_quant: str,
-                     spec_k: int, prefix_cache: bool, *, seed: int = 0,
+                     spec_k: int, prefix_cache: bool, mesh: bool = False,
+                     *, seed: int = 0,
                      n_requests: int = 10,
                      max_lives: int = 12) -> dict[str, Any]:
     """One kill/restore cell: the full fault mix PLUS seeded process kills.
@@ -278,9 +309,9 @@ def run_restart_cell(label: str, kv_layout: str, kv_quant: str,
     from repro.serving import snapshot as snaplib
 
     rng = np.random.default_rng(seed)
-    cfg = _tiny_cfg(kv_layout, kv_quant)
+    cfg = _tiny_cfg(kv_layout, kv_quant, mesh)
     params = api.init_params(cfg, jax.random.PRNGKey(seed))
-    cc = _oracle_cc((kv_layout, kv_quant, spec_k))
+    cc = _oracle_cc((kv_layout, kv_quant, spec_k, mesh))
 
     def monkey(life: int) -> ChaosMonkey:
         # Life 0 dies DETERMINISTICALLY at tick 7 — one tick past the first
@@ -295,15 +326,9 @@ def run_restart_cell(label: str, kv_layout: str, kv_quant: str,
 
     max_len = 96
     workdir = tempfile.mkdtemp(prefix=f"restart_{label}_")
-    engine = Engine(cfg, params, batch_size=4, max_len=max_len,
-                    chunk_size=16, prefill_token_budget=32,
-                    spec_k=spec_k, prefix_cache=prefix_cache,
-                    max_preemptions=2, audit_every=1, chaos=monkey(0),
-                    compile_cache=cc,
-                    snapshot_dir=workdir, snapshot_every=6)
 
     shared = rng.integers(0, cfg.vocab_size, 24)   # hot prefix for sharing
-    oracle = {}
+    reqs, oracle = [], {}
     for rid in range(n_requests):
         if rid % 3 == 0 and prefix_cache:
             prompt = np.concatenate(
@@ -315,19 +340,33 @@ def run_restart_cell(label: str, kv_layout: str, kv_quant: str,
         oracle[rid] = reference_decode(cfg, params, prompt,
                                        r.max_new_tokens, max_len=max_len,
                                        compile_cache=cc)
-        engine.submit(r)
+        reqs.append(r)
 
-    lives = 1
-    while True:
-        try:
-            res = engine.run(max_steps=4000)
-            break
-        except EngineKilled:
-            # the killed engine object is abandoned wholesale — the restore
-            # may only consult what reached disk
-            engine = Engine.restore(workdir, params, chaos=monkey(lives),
-                                    compile_cache=cc)
-            lives += 1
+    # restores happen INSIDE the mesh context too: a snapshot taken under a
+    # mesh records its home count, and the restoring engine must derive the
+    # same one (snapshot._load_host enforces it)
+    with _mesh_ctx(mesh):
+        engine = Engine(cfg, params, batch_size=4, max_len=max_len,
+                        chunk_size=16, prefill_token_budget=32,
+                        spec_k=spec_k, prefix_cache=prefix_cache,
+                        max_preemptions=2, audit_every=1, chaos=monkey(0),
+                        compile_cache=cc,
+                        snapshot_dir=workdir, snapshot_every=6)
+        for r in reqs:
+            engine.submit(r)
+
+        lives = 1
+        while True:
+            try:
+                res = engine.run(max_steps=4000)
+                break
+            except EngineKilled:
+                # the killed engine object is abandoned wholesale — the
+                # restore may only consult what reached disk
+                engine = Engine.restore(workdir, params,
+                                        chaos=monkey(lives),
+                                        compile_cache=cc)
+                lives += 1
     assert res.drained, (
         f"{label}: restart soak did not drain (truncated={res.truncated} "
         f"stalled={res.stalled} in_flight={res.in_flight})")
@@ -358,7 +397,8 @@ def run_restart_cell(label: str, kv_layout: str, kv_quant: str,
             f"{label}: leaked blocks across the restart boundary")
     stats = {"cell": label, "lives": lives, "kills": kills,
              "snapshots_taken": engine.snapshots_taken,
-             "outcomes": outcomes, **engine.resilience_stats()}
+             "outcomes": outcomes, "n_homes": getattr(engine, "n_homes", 1),
+             **engine.resilience_stats()}
     shutil.rmtree(workdir, ignore_errors=True)
     return stats
 

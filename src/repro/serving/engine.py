@@ -432,15 +432,33 @@ class Engine:
         if self.paged:
             from repro.models.attention import (paged_geometry,
                                                 paged_pool_blocks)
+            from repro.parallel import decode_attn
+            from repro.parallel.hints import active_mesh
             self.block_size, self.n_pages = paged_geometry(cfg, max_len)
             self.pool_blocks = paged_pool_blocks(cfg, batch_size, max_len)
             self._null_block = self.pool_blocks      # last pool row
-            self.alloc = BlockAllocator(self.pool_blocks)
+            # topology-aware allocation: when decode will run through the
+            # sharded paged path (a mesh is active at construction), the
+            # pool rows split into per-shard block homes and the allocator
+            # leases round-robin across them — paged_homes is the ONE
+            # function both this ctor and the dispatch gate derive from,
+            # so host accounting and device routing cannot disagree
+            self.n_homes = decode_attn.paged_homes(
+                active_mesh(), batch_size, self.pool_blocks + 1,
+                window=cfg.window)
+            self.alloc = BlockAllocator(self.pool_blocks, self.n_homes)
             self._page_table = np.full((batch_size, self.n_pages),
                                        self._null_block, np.int32)
             self._slot_blocks: list[list[int]] = [[] for _ in
                                                   range(batch_size)]
             self._slot_reserve = [0] * batch_size    # worst-case not-yet-leased
+            # per-home split of each slot's reservation (row sums equal
+            # _slot_reserve): the deadlock-freedom invariant holds PER
+            # home — sum over slots of _reserve_home[:, h] <= free blocks
+            # in home h — so a row can always lease its next block from a
+            # home it reserved in, whatever the other homes' pressure
+            self._reserve_home = [[0] * self.n_homes
+                                  for _ in range(batch_size)]
         # prefix sharing: radix cache over prompt tokens -> physical blocks.
         # Gated to paged transformer families: recurrent state (ssm/hybrid)
         # has no per-token block chain, and audio decoder K/V depends on the
@@ -709,22 +727,75 @@ class Engine:
             freed += 1
         return freed
 
+    def _reserved_by_home(self) -> list[int]:
+        """Outstanding reservations per block home, summed over slots."""
+        totals = [0] * self.n_homes
+        for vec in self._reserve_home:
+            for h, v in enumerate(vec):
+                totals[h] += v
+        return totals
+
+    def _plan_reserve(self, need: int) -> list[int] | None:
+        """Distribute a worst-case reservation of ``need`` blocks across
+        block homes by remaining headroom (free minus already reserved,
+        per home), so leases spread round-robin over the mesh and the
+        deadlock-freedom invariant holds home by home.  Returns the
+        per-home vector, or None when the pool cannot cover it.  With one
+        home this degenerates to the PR 5 total check."""
+        free_h = self.alloc.free_by_home()
+        res_h = self._reserved_by_home()
+        head = [f - r for f, r in zip(free_h, res_h)]
+        if sum(h for h in head if h > 0) < need:
+            return None
+        vec = [0] * self.n_homes
+        for _ in range(need):
+            h = max(range(self.n_homes), key=lambda j: (head[j], -j))
+            vec[h] += 1
+            head[h] -= 1
+        return vec
+
     def _can_reserve(self, req: Request,
                      plan: _PrefixPlan | None = None) -> bool:
         """Admission gate: unreserved free blocks must cover the request's
-        worst case.  Every admitted row can then ALWAYS lease its next block
-        (``sum(reserve) <= len(free)`` is invariant), so decode never stalls
+        worst case — per block HOME, not just in total.  Every admitted row
+        can then ALWAYS lease its next block from a home it reserved in
+        (``sum(reserve) <= free`` holds per home), so decode never stalls
         and the pool never deadlocks — pressure shows up as admission
         stalls, never as a stuck batch.  A prefix-cache hit shrinks the need
         by its shared blocks (the CoW page leases normally, inside the
-        reservation); on a shortfall, cold cache leaves are evicted first."""
+        reservation); on a shortfall, cold cache leaves are evicted one at
+        a time until the per-home plan closes (or nothing is evictable)."""
         need = self._worst_case_blocks(req)
         if plan is not None:
             need -= len(plan.shared)
-        avail = self.alloc.n_free - sum(self._slot_reserve)
-        if need > avail and self.prefix is not None:
-            avail += self._evict_for(need - avail, plan)
-        return need <= avail
+        vec = self._plan_reserve(need)
+        while vec is None and self.prefix is not None:
+            if self._evict_for(1, plan) == 0:
+                break                       # nothing evictable left
+            vec = self._plan_reserve(need)
+        return vec is not None
+
+    def _lease_for_slot(self, idx: int) -> int:
+        """Lease one block against slot ``idx``'s reservation, consuming
+        the home with the most remaining reserved blocks (ties to the
+        lowest home) — the per-home invariant guarantees that home has a
+        free block, so the lease cannot fail."""
+        vec = self._reserve_home[idx]
+        homes = [h for h in range(self.n_homes) if vec[h] > 0]
+        if not homes:
+            raise RuntimeError(
+                f"slot {idx} leased past its reservation — worst-case "
+                "accounting is wrong")
+        h = max(homes, key=lambda j: (vec[j], -j))
+        try:
+            blk = self.alloc.lease(home=h)
+        except RuntimeError as e:
+            raise RuntimeError(
+                f"{e} despite a reservation there — per-home accounting "
+                "is wrong") from None
+        vec[h] -= 1
+        self._slot_reserve[idx] -= 1
+        return blk
 
     def _lease_to(self, idx: int, new_len: int) -> None:
         """Grow slot ``idx`` to cover ``new_len`` tokens, leasing blocks as
@@ -732,17 +803,9 @@ class Engine:
         need = -(-new_len // self.block_size)
         owned = self._slot_blocks[idx]
         while len(owned) < need:
-            if not self.alloc.n_free:   # _can_reserve makes this unreachable
-                raise RuntimeError("paged KV pool exhausted despite "
-                                   "reservation — allocator invariant broken")
-            blk = self.alloc.lease()
+            blk = self._lease_for_slot(idx)
             self._page_table[idx, len(owned)] = blk
             owned.append(blk)
-            self._slot_reserve[idx] -= 1
-            if self._slot_reserve[idx] < 0:
-                raise RuntimeError(
-                    f"slot {idx} leased past its reservation — worst-case "
-                    "accounting is wrong")
 
     def pool_stats(self) -> dict[str, int]:
         """Free-list invariants, exposed for leak/double-free checks.
@@ -754,6 +817,7 @@ class Engine:
             "total": self.pool_blocks,
             "free": self.alloc.n_free,
             "leased": self.alloc.n_live,
+            "n_homes": self.n_homes,
             "reserved_outstanding": sum(self._slot_reserve),
             "shared_blocks": self.alloc.n_shared(),
             "cached_blocks": (len(self.prefix)
@@ -829,6 +893,7 @@ class Engine:
                     raise RuntimeError(f"{e} (slot {idx})") from None
             self._slot_blocks[idx] = []
             self._slot_reserve[idx] = 0
+            self._reserve_home[idx] = [0] * self.n_homes
             self._page_table[idx, :] = self._null_block
         if self.drafter is not None:
             self.drafter.reset(idx)
@@ -862,7 +927,11 @@ class Engine:
                     self.alloc.decref(blk)
                 except RuntimeError as e:
                     raise RuntimeError(f"{e} (rewind slot {idx})") from None
+                # the freed block physically returns to ITS home's free
+                # list, so crediting the reservation to that same home
+                # preserves the per-home invariant exactly
                 self._slot_reserve[idx] += 1
+                self._reserve_home[idx][self.alloc.home(blk)] += 1
 
     # -- resilience: quarantine, deadlines, preemption ----------------------
 
@@ -1032,6 +1101,19 @@ class Engine:
             assert reserved <= self.alloc.n_free, (
                 f"reservation invariant broken: {reserved} reserved > "
                 f"{self.alloc.n_free} free")
+            # per-home deadlock freedom + reservation-vector coherence
+            assert self.alloc.n_homes == self.n_homes, (
+                "allocator homes diverged from the engine topology")
+            free_h = self.alloc.free_by_home()
+            for h, r in enumerate(self._reserved_by_home()):
+                assert r <= free_h[h], (
+                    f"home {h}: {r} reserved > {free_h[h]} free — per-home "
+                    "deadlock-freedom broken")
+            for i, vec in enumerate(self._reserve_home):
+                assert all(v >= 0 for v in vec) and \
+                    sum(vec) == self._slot_reserve[i], (
+                    f"slot {i} home-reservation vector {vec} != total "
+                    f"{self._slot_reserve[i]}")
             for i, s in enumerate(self._slots):
                 owned = self._slot_blocks[i]
                 if s.req is None:
@@ -1046,6 +1128,17 @@ class Engine:
                 for blk in owned:
                     assert self.alloc.ref(blk) >= 1, (
                         f"slot {i} maps freed block {blk}")
+                    # every leased block resolves to (shard, local block)
+                    # consistently with its page-table entry: the id is a
+                    # real pool block (never the null row) and its home's
+                    # local translation stays inside the home's rows
+                    assert 0 <= blk < self.pool_blocks, (
+                        f"slot {i} maps out-of-pool block {blk}")
+                    home = self.alloc.home(blk)
+                    local = blk - home * self.alloc.rows_per_home
+                    assert (0 <= home < self.n_homes and
+                            0 <= local < self.alloc.rows_per_home), (
+                        f"block {blk} resolves outside home partition")
             if self.prefix is not None:
                 for blk in self.prefix.blocks():
                     assert self.alloc.ref(blk) >= 1, (
@@ -1081,13 +1174,9 @@ class Engine:
         The lease consumes the slot's reservation like any other, so the
         "+1 CoW block" is already inside the admission accounting."""
         page = len(self._slot_blocks[idx])
-        if not self.alloc.n_free:   # _can_reserve makes this unreachable
-            raise RuntimeError("paged KV pool exhausted despite "
-                               "reservation — CoW accounting is wrong")
-        dst = self.alloc.lease()
+        dst = self._lease_for_slot(idx)
         self._page_table[idx, page] = dst
         self._slot_blocks[idx].append(dst)
-        self._slot_reserve[idx] -= 1
         fn = self.cache_compiles.get("cow", 0, self._build_cow)
         self.cache = fn(self.cache, np.int32(src), np.int32(dst))
         self.cow_copies += 1
@@ -1118,8 +1207,14 @@ class Engine:
         the chunk cursor at the first uncovered prompt token."""
         if self.paged:
             shared = list(plan.shared) if plan is not None else []
-            self._slot_reserve[idx] = (self._worst_case_blocks(req) -
-                                       len(shared))
+            need = self._worst_case_blocks(req) - len(shared)
+            vec = self._plan_reserve(need)
+            if vec is None:   # _can_reserve just planned this very need
+                raise RuntimeError(
+                    "admission without a coverable reservation — "
+                    "_can_reserve gate bypassed")
+            self._slot_reserve[idx] = need
+            self._reserve_home[idx] = vec
             for page, blk in enumerate(shared):
                 self.alloc.incref(blk)
                 self._page_table[idx, page] = blk

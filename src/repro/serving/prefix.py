@@ -49,14 +49,34 @@ class BlockAllocator:
     PR 5 allocator it replaces, so lease order — and therefore the block
     recycling the paged tests scramble — is unchanged when every refcount
     stays at 1.
+
+    Topology (``n_homes > 1``, the sharded paged path): the POOL's rows —
+    ``n_blocks`` usable blocks plus the null row, ``n_blocks + 1`` total —
+    are partitioned into ``n_homes`` contiguous runs of equal size; block
+    ``b`` is HOME to shard ``b // rows_per_home`` (the null row lands in
+    the last home by construction).  A home is a pure function of the
+    block id, so a block keeps its home across incref/decref — prefix
+    sharing and CoW never migrate K/V between shards.  ``lease(home=h)``
+    takes specifically from home ``h`` (LIFO within the home);
+    ``lease()`` with no home rotates round-robin across non-empty homes so
+    unconstrained leases still spread context over the mesh.
     """
 
-    def __init__(self, n_blocks: int):
+    def __init__(self, n_blocks: int, n_homes: int = 1):
         if n_blocks < 1:
             raise ValueError(f"need >= 1 block, got {n_blocks}")
+        if n_homes < 1:
+            raise ValueError(f"need >= 1 home, got {n_homes}")
+        if (n_blocks + 1) % n_homes:
+            raise ValueError(
+                f"pool rows {n_blocks + 1} (incl. null) must split evenly "
+                f"into {n_homes} block homes")
         self.n_blocks = n_blocks
+        self.n_homes = n_homes
+        self.rows_per_home = (n_blocks + 1) // n_homes
         self.free: list[int] = list(range(n_blocks))
         self.refs: list[int] = [0] * n_blocks
+        self._next_home = 0
 
     @property
     def n_free(self) -> int:
@@ -69,11 +89,39 @@ class BlockAllocator:
     def ref(self, blk: int) -> int:
         return self.refs[blk]
 
-    def lease(self) -> int:
-        """Take a free block (refcount 0 -> 1)."""
+    def home(self, blk: int) -> int:
+        """The shard block ``blk`` is home to (pure function of the id)."""
+        return blk // self.rows_per_home
+
+    def free_by_home(self) -> list[int]:
+        """Free-block count per home."""
+        counts = [0] * self.n_homes
+        for blk in self.free:
+            counts[self.home(blk)] += 1
+        return counts
+
+    def lease(self, home: int | None = None) -> int:
+        """Take a free block (refcount 0 -> 1), from home ``home`` when
+        given (LIFO within the home), else round-robin across homes."""
         if not self.free:
             raise RuntimeError("KV block pool exhausted")
-        blk = self.free.pop()
+        if home is None and self.n_homes > 1:
+            by_home = self.free_by_home()
+            for step in range(self.n_homes):
+                h = (self._next_home + step) % self.n_homes
+                if by_home[h]:
+                    home = h
+                    self._next_home = (h + 1) % self.n_homes
+                    break
+        if home is None:
+            blk = self.free.pop()
+        else:
+            idx = next((i for i in range(len(self.free) - 1, -1, -1)
+                        if self.home(self.free[i]) == home), None)
+            if idx is None:
+                raise RuntimeError(
+                    f"KV block pool exhausted in home {home}")
+            blk = self.free.pop(idx)
         if self.refs[blk] != 0:
             raise RuntimeError(
                 f"free list corrupt: block {blk} freed at refcount "
@@ -106,7 +154,8 @@ class BlockAllocator:
 
     def check(self) -> None:
         """The allocator partition invariant: every block is either on the
-        free list with refcount 0, or off it with refcount >= 1."""
+        free list with refcount 0, or off it with refcount >= 1; homes
+        partition the pool rows with the null row in the last home."""
         if sorted(set(self.free)) != sorted(self.free):
             raise AssertionError("free list holds duplicate block ids")
         free = set(self.free)
@@ -117,6 +166,15 @@ class BlockAllocator:
                 raise AssertionError(
                     f"block {blk}: refcount {r} vs free={blk in free} — "
                     "leak or double lease")
+        if self.rows_per_home * self.n_homes != self.n_blocks + 1:
+            raise AssertionError(
+                f"homes {self.n_homes} x {self.rows_per_home} do not tile "
+                f"the {self.n_blocks + 1} pool rows")
+        if self.home(self.n_blocks) != self.n_homes - 1:
+            raise AssertionError("null row must be home to the last shard")
+        if sum(self.free_by_home()) != self.n_free:
+            raise AssertionError("per-home free counts do not partition "
+                                 "the free list")
 
 
 class _Node:

@@ -304,6 +304,8 @@ def _dump_host(eng: Engine, epoch: int) -> dict:
             "page_table": eng._page_table.tolist(),
             "slot_blocks": [list(b) for b in eng._slot_blocks],
             "slot_reserve": list(eng._slot_reserve),
+            "n_homes": eng.n_homes,
+            "reserve_home": [list(v) for v in eng._reserve_home],
             "free": list(eng.alloc.free),
             "refs": list(eng.alloc.refs),
         }
@@ -417,6 +419,20 @@ def _load_host(eng: Engine, host: dict) -> None:
         eng._page_table = np.asarray(pg["page_table"], np.int32)
         eng._slot_blocks = [list(bs) for bs in pg["slot_blocks"]]
         eng._slot_reserve = list(pg["slot_reserve"])
+        # block homes must round-trip: a snapshot taken under a mesh only
+        # restores into an engine built under the same home topology (the
+        # page-table block spread is meaningless otherwise)
+        homes = int(pg.get("n_homes", 1))
+        if homes != eng.n_homes:
+            raise RuntimeError(
+                f"snapshot was taken with {homes} block homes but the "
+                f"restoring engine derived {eng.n_homes} — restore under "
+                "the same device mesh the snapshot was saved under")
+        if "reserve_home" in pg:
+            eng._reserve_home = [[int(x) for x in v]
+                                 for v in pg["reserve_home"]]
+        else:           # pre-home snapshot: only valid single-home
+            eng._reserve_home = [[int(r)] for r in eng._slot_reserve]
         eng.alloc.free = [int(x) for x in pg["free"]]
         eng.alloc.refs = [int(x) for x in pg["refs"]]
     if eng.prefix is not None and host["prefix"] is not None:

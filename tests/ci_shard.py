@@ -30,6 +30,9 @@ WEIGHTS = {
     "test_ffn_fused.py": 42,
     "test_kernels.py": 45,
     "test_lifecycle.py": 18,
+    # 17 collected, weighted up: its 8-device subprocess worker re-imports
+    # jax and compiles the sharded paths — wall-clock like ~40 plain tests
+    "test_mesh_serving.py": 40,
     "test_mixed.py": 27,
     "test_paged_engine.py": 11,
     "test_paged_fuzz.py": 14,

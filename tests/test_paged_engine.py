@@ -172,6 +172,7 @@ def test_double_free_detected():
     engine = _alloc_engine()
     engine._slots[0].req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
     engine._slot_reserve[0] = 2
+    engine._reserve_home[0] = [2]   # single-home engine
     engine._lease_to(0, 9)                 # 2 blocks
     engine._slot_blocks[0].append(engine._free_blocks[0])  # corrupt: alias
     with pytest.raises(RuntimeError, match="double free"):
@@ -182,6 +183,7 @@ def test_lease_respects_page_table():
     engine = _alloc_engine()
     engine._slots[0].req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
     engine._slot_reserve[0] = 3
+    engine._reserve_home[0] = [3]   # single-home engine
     engine._lease_to(0, 17)                # 3 blocks (bs=8)
     owned = engine._slot_blocks[0]
     assert len(owned) == 3 and len(set(owned)) == 3

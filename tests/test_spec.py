@@ -283,6 +283,7 @@ def test_rewind_returns_whole_tail_blocks():
     engine = _paged_engine()
     engine._slots[0].req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
     engine._slot_reserve[0] = 3
+    engine._reserve_home[0] = [3]   # single-home engine
     engine._lease_to(0, 17)                  # 3 blocks at block_size=8
     engine._slots[0].length = 17
     freed_order = list(engine._slot_blocks[0])
@@ -313,6 +314,7 @@ def test_rewind_double_free_detected():
     engine = _paged_engine()
     engine._slots[0].req = Request(rid=0, prompt=np.arange(4, dtype=np.int32))
     engine._slot_reserve[0] = 2
+    engine._reserve_home[0] = [2]   # single-home engine
     engine._lease_to(0, 16)                  # 2 blocks
     engine._slot_blocks[0][-1] = engine._free_blocks[0]   # corrupt: alias
     with pytest.raises(RuntimeError, match="double free"):
